@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, workload setup, CSV emission."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bank as bank_lib, executor, packet as pkt
+from repro.data import packets as pk
+from repro.train import bnn
+
+
+def time_us(fn, iters: int = 50, warmup: int = 3) -> float:
+    """Median-of-means wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    reps = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for _ in range(max(iters // 5, 1)):
+            fn()
+        reps.append((time.perf_counter() - t0) / max(iters // 5, 1))
+    return float(np.median(reps)) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.4f},{derived}")
+
+
+@functools.lru_cache(maxsize=1)
+def trained_bank():
+    """Train the paper's two slots once per process (cached)."""
+    s0, s1 = bnn.train_slot_pair(seed=0, epochs=2, samples_per_group=512)
+    return bank_lib.stack_bank([s0, s1]), s0, s1
+
+
+@functools.lru_cache(maxsize=1)
+def val_payload(n: int = 4096):
+    xb, yb = pk.load_split("val", max(n // 2, 256), 0)
+    w = pk.to_payload_words(xb)
+    reps = -(-n // w.shape[0])
+    return np.tile(w, (reps, 1))[:n], np.tile(yb, reps)[:n]
+
+
+def bank_with_slots(num_slots: int):
+    """The paper's scaling setup: the same two weight sets alternated."""
+    _, s0, s1 = trained_bank()
+    return bank_lib.stack_bank(
+        [s0 if i % 2 == 0 else s1 for i in range(num_slots)])

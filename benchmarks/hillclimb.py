@@ -1,0 +1,72 @@
+"""§Perf hillclimb driver: run optimization variants for the three selected
+cells and report deltas against the baseline dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --out results/perf
+"""
+
+# NOTE: must run in a fresh process; sets the device count before jax init.
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+CELLS = {
+    # worst useful-FLOPs ratio: 15 heads % 16 != 0 -> attention replicated
+    # across the TP axis; flash residuals blow memory
+    "A": ("smollm-360m", "train_4k",
+          ["flashremat", "seqshard", "flashremat+seqshard"]),
+    # most collective-bound: FSDP contraction-dim sharding makes GSPMD emit
+    # partial-sum all-reduces of (B, 32k, d) activations
+    "B": ("arctic-480b", "prefill_32k", ["serve2d", "serve2d+seqshard"]),
+    # most technique-representative: adapter-banked decode (per-request slot
+    # routing) against a 32k cache
+    "C": ("glm4-9b", "decode_32k", ["int8cache"]),
+}
+
+
+def main():
+    from repro.launch import dryrun
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf")
+    ap.add_argument("--baseline-dir", default="results/dryrun")
+    ap.add_argument("--cells", default="ABC")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for key in args.cells:
+        arch, shape, variants = CELLS[key]
+        base_file = os.path.join(args.baseline_dir,
+                                 f"{arch}_{shape}_single.json")
+        with open(base_file) as f:
+            base = json.load(f)
+        br = base["roofline"]
+        print(f"\n=== cell {key}: {arch} | {shape} | single ===")
+        print(f"baseline: compute={br['compute_s']:.4f}s "
+              f"memory={br['memory_s']:.4f}s collective={br['collective_s']:.4f}s "
+              f"dominant={br['dominant']} bound={br['step_s_lower_bound']:.4f}s")
+        for variant in variants:
+            try:
+                res = dryrun.run_cell(arch, shape, multi_pod=False,
+                                      variant=variant)
+            except Exception as e:
+                print(f"  {variant}: ERROR {type(e).__name__}: {e}")
+                continue
+            if res["status"] != "ok":
+                print(f"  {variant}: {res['status']} {res.get('error','')[:200]}")
+                continue
+            r = res["roofline"]
+            speedup = br["step_s_lower_bound"] / max(r["step_s_lower_bound"], 1e-12)
+            print(f"  {variant}: compute={r['compute_s']:.4f}s "
+                  f"memory={r['memory_s']:.4f}s collective={r['collective_s']:.4f}s "
+                  f"dominant={r['dominant']} bound={r['step_s_lower_bound']:.4f}s "
+                  f"speedup={speedup:.2f}x "
+                  f"mem/dev={res['memory'].get('per_device_total',0)/2**30:.1f}GiB")
+            fname = f"{arch}_{shape}_single_{variant.replace('+','_')}.json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Roofline report: aggregates the dry-run JSONs (results/dryrun) into the
+EXPERIMENTS.md table — per (arch x shape x mesh): three terms, dominant
+bottleneck, MODEL_FLOPS ratio, per-device memory."""
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS) -> list[dict]:
+    cells = []
+    if not os.path.isdir(results_dir):
+        return cells
+    for name in sorted(os.listdir(results_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(results_dir, name)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def fmt_table(cells: list[dict], mesh: str = "single") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+            "| useful_flops | mem/dev GiB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("status") == "skipped":
+            rows.append(f"| {c['cell'].split('|')[0]} | {c['cell'].split('|')[1]} "
+                        f"| — | — | — | skipped | — | — |")
+            continue
+        if c.get("status") != "ok":
+            continue
+        r = c["roofline"]
+        mem = c["memory"].get("per_device_total", 0) / 2**30
+        ratio = c.get("useful_flops_ratio")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant']} | {ratio:.3f} | {mem:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    if not ok:
+        print("roofline.cells,0,no dry-run results found — run "
+              "`python -m repro.launch.dryrun --all --mesh both --out results/dryrun`")
+        return
+    print(f"roofline.cells,{len(ok)},compiled cells")
+    by_dom = {}
+    for c in ok:
+        by_dom.setdefault(c["roofline"]["dominant"], []).append(c["cell"])
+    for dom, cs in sorted(by_dom.items()):
+        print(f"roofline.dominant.{dom},{len(cs)},e.g. {cs[0]}")
+    worst = min(
+        (c for c in ok if c["kind"] == "train"),
+        key=lambda c: c.get("useful_flops_ratio") or 0)
+    print(f"roofline.worst_useful_flops,{worst.get('useful_flops_ratio'):.4f},"
+          f"{worst['cell']}")
+    most_coll = max(
+        ok, key=lambda c: c["roofline"]["collective_s"]
+        / max(c["roofline"]["step_s_lower_bound"], 1e-12))
+    print(f"roofline.most_collective_bound,"
+          f"{most_coll['roofline']['collective_s']:.4f},{most_coll['cell']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig4_runtime, fig5_scaling, fig6_slot_behavior,
+                            roofline, table4_continuity, table5_controlplane)
+
+    benches = [
+        ("fig4", fig4_runtime.main),
+        ("fig5", fig5_scaling.main),
+        ("fig6", fig6_slot_behavior.main),
+        ("table4", table4_continuity.main),
+        ("table5", table5_controlplane.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception as e:  # keep the suite running
+            failures += 1
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,14 @@
+"""The paper's full system, end to end: train both resident slot models on
+the synthetic IoT-23-like workload, preload the bank, replay a boundary
+stream, and report the headline numbers (Fig. 4 / Table IV analogues).
+
+Run:  PYTHONPATH=src python examples/packet_pipeline.py
+(equivalent to: python -m repro.launch.packetpath --packets 2048)
+"""
+
+from repro.launch import packetpath
+import sys
+
+sys.argv = [sys.argv[0], "--packets", "2048", "--epochs", "2",
+            "--samples-per-group", "512"]
+packetpath.main()

@@ -1,0 +1,57 @@
+"""End-to-end serving driver (the paper's kind: serve a small model with
+batched requests) — BoundSwitch's technique lifted to LLM serving.
+
+A smollm-family model carries a K=2 resident adapter bank; each request's
+metadata selects its slot, and the engine routes every prefill/decode step
+through the bank at request granularity with zero engine reconfiguration.
+
+Run:  PYTHONPATH=src python examples/serve_bank.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import api
+from repro.serve.engine import Request, ServeEngine
+
+cfg = get_config("smollm-360m").reduced(
+    bank_mode="adapter", bank_slots=2, remat="none", dtype="float32",
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
+params = api.init(jax.random.PRNGKey(0), cfg)
+
+# give slot 1 a distinct behavior (in production: per-tenant finetuned deltas)
+def bump(t):
+    if isinstance(t, dict):
+        if "a" in t and "b" in t:
+            t["b"] = t["b"].at[1].set(
+                jax.random.normal(jax.random.PRNGKey(7), t["b"].shape[1:]) * 0.3)
+        return {k: bump(v) for k, v in t.items()}
+    return t
+params = bump(params)
+
+engine = ServeEngine(params, cfg, max_batch=4, max_seq=128,
+                     prefill_buckets=(16, 64))
+rng = np.random.default_rng(0)
+t0 = time.perf_counter()
+for i in range(12):
+    engine.submit(Request(
+        rid=i,
+        prompt=list(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 16)))),
+        slot_id=i % 2,                    # the reg0 analogue
+        max_new_tokens=8,
+    ))
+finished = engine.run_until_done()
+dt = time.perf_counter() - t0
+
+tokens = sum(len(f.output) for f in finished)
+print(f"served {len(finished)} requests / {tokens} tokens in {dt:.2f}s "
+      f"({engine.ticks} engine ticks)")
+by_slot = {0: [], 1: []}
+for f in sorted(finished, key=lambda f: f.rid):
+    by_slot[f.rid % 2].append(tuple(f.output[:4]))
+    print(f"  rid={f.rid} slot={f.rid % 2} out={f.output}")
+print("\ndistinct slot behaviors on the shared engine:",
+      set(by_slot[0]) != set(by_slot[1]))

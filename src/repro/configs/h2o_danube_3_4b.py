@@ -1,0 +1,19 @@
+"""h2o-danube-3-4b — dense llama+mistral mix with GQA + sliding-window
+attention [arXiv:2401.16818; unverified]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=10240,
+    vocab_size=32000,
+    sliding_window=4096,     # mistral-style SWA -> bounded decode cache
+    rope_theta=500000.0,
+    bank_mode="adapter",
+    bank_slots=4,
+)

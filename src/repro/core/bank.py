@@ -1,0 +1,216 @@
+"""Resident model bank (paper §II-C) as a generic JAX pytree container.
+
+``M = {f_0 .. f_{K-1}}`` is realized by stacking K structurally identical
+parameter pytrees on a new leading axis.  All slots live at fixed HBM
+locations inside ONE compiled program for the whole runtime — switching is
+slot *indexing* (data), never recompilation or weight delivery (code).
+
+Selection strategies (see DESIGN.md §3):
+  * ``take``    — per-row gather ``leaf[slots]``.  Exact packet granularity;
+                  materializes per-row weights (memory-bound).
+  * ``onehot``  — contraction with ``one_hot(slots, K)``; selection becomes
+                  an MXU einsum.  K x FLOPs, zero gathers — wins for small K.
+  * ``grouped`` — sort rows by slot so each kernel block serves one slot,
+                  then scalar-prefetch Pallas kernels fetch only the selected
+                  slot's block from HBM (O(1) per block, the closest TPU
+                  analogue of the paper's pointer-chase).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # pytree
+
+
+def stack_bank(param_sets: list[Params]) -> Params:
+    """Stack K structurally identical pytrees into (K, ...) leaves."""
+    if not param_sets:
+        raise ValueError("empty bank")
+    treedefs = {jax.tree_util.tree_structure(p) for p in param_sets}
+    if len(treedefs) != 1:
+        raise ValueError("bank slots must share one pytree structure")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *param_sets)
+
+
+def bank_size(bank: Params) -> int:
+    leaves = jax.tree_util.tree_leaves(bank)
+    return int(leaves[0].shape[0])
+
+
+def select_slot(bank: Params, k) -> Params:
+    """f_k: materialize one resident slot (traceable; k may be a tracer)."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[k], bank)
+
+
+def update_slot(bank: Params, k: int, new_params: Params) -> Params:
+    """Control-plane style in-place slot replacement (the *heavyweight* path —
+    used only by the Table V baseline, never by resident switching)."""
+    return jax.tree_util.tree_map(
+        lambda leaf, new: leaf.at[k].set(new), bank, new_params
+    )
+
+
+def bank_bytes(bank: Params) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(bank))
+
+
+# ---------------------------------------------------------------------------
+# grouped execution support
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Grouping:
+    """Result of sorting a batch by slot for block-wise execution."""
+    order: jnp.ndarray        # (B,) permutation applied to rows
+    inverse: jnp.ndarray      # (B,) inverse permutation
+    block_slots: jnp.ndarray  # (B // block_b,) slot id per block
+    valid: jnp.ndarray        # (B,) bool — False for rows whose block mixes slots
+
+
+def group_by_slot(slots: jnp.ndarray, block_b: int) -> Grouping:
+    """Stable-sort rows by slot and derive per-block slot ids.
+
+    With B a multiple of ``block_b``, blocks that land entirely inside one
+    slot's segment are exact; rows in straddling blocks are flagged invalid
+    so callers can re-run them through the exact ``take`` path (in practice
+    the scheduler pads each slot's segment to a block multiple so ``valid``
+    is all-True; the flag makes the invariant checkable).
+    """
+    bsz = slots.shape[0]
+    if bsz % block_b:
+        raise ValueError(f"B={bsz} must be a multiple of block_b={block_b}")
+    order = jnp.argsort(slots, stable=True)
+    sorted_slots = slots[order]
+    blocks = sorted_slots.reshape(-1, block_b)
+    block_slots = blocks[:, 0].astype(jnp.int32)
+    valid_blocks = jnp.all(blocks == blocks[:, :1], axis=1)
+    valid_sorted = jnp.repeat(valid_blocks, block_b, total_repeat_length=bsz)
+    inverse = jnp.argsort(order)
+    return Grouping(
+        order=order,
+        inverse=inverse,
+        block_slots=block_slots,
+        valid=valid_sorted[inverse],
+    )
+
+
+@dataclasses.dataclass
+class PaddedGrouping:
+    """Exact, static-shape grouping: every block is single-slot.
+
+    Each slot's segment is padded up to a multiple of ``block_b`` inside a
+    buffer of static size ``b_pad = roundup(B + K*block_b)``; padding rows are
+    zeros executed under their block's slot (wasted-but-bounded compute:
+    < K * block_b rows).  This is the in-jit production path for the grouped
+    strategy — exact per-row semantics with O(1)-per-block slot resolution.
+    """
+    order: jnp.ndarray        # (B,) stable sort permutation
+    dest: jnp.ndarray         # (B,) destination of sorted row i in the padded buffer
+    block_slots: jnp.ndarray  # (b_pad // block_b,) slot id per block
+    b_pad: int                # static padded row count
+
+
+def group_by_slot_padded(
+    slots: jnp.ndarray, num_slots: int, block_b: int
+) -> PaddedGrouping:
+    b = slots.shape[0]
+    order = jnp.argsort(slots, stable=True)
+    sorted_slots = slots[order]
+    counts = jnp.bincount(slots, length=num_slots)
+    padded = ((counts + block_b - 1) // block_b) * block_b
+    seg_start = jnp.concatenate(
+        [jnp.zeros(1, padded.dtype), jnp.cumsum(padded)[:-1]]
+    )
+    count_start = jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    rank = jnp.arange(b) - count_start[sorted_slots]
+    dest = (seg_start[sorted_slots] + rank).astype(jnp.int32)
+    b_pad = ((b + num_slots * block_b + block_b - 1) // block_b) * block_b
+    seg_end = jnp.cumsum(padded)
+    block_starts = jnp.arange(b_pad // block_b) * block_b
+    block_seg = jnp.searchsorted(seg_end, block_starts, side="right")
+    block_slots = jnp.clip(block_seg, 0, num_slots - 1).astype(jnp.int32)
+    return PaddedGrouping(order=order, dest=dest, block_slots=block_slots, b_pad=b_pad)
+
+
+def scatter_padded(x: jnp.ndarray, g: PaddedGrouping) -> jnp.ndarray:
+    """Place rows into the padded, slot-grouped layout (padding rows zero)."""
+    out = jnp.zeros((g.b_pad,) + x.shape[1:], x.dtype)
+    return out.at[g.dest].set(x[g.order])
+
+
+def gather_padded(y_pad: jnp.ndarray, g: PaddedGrouping) -> jnp.ndarray:
+    """Undo ``scatter_padded`` on the kernel output."""
+    b = g.order.shape[0]
+    out = jnp.zeros((b,) + y_pad.shape[1:], y_pad.dtype)
+    return out.at[g.order].set(y_pad[g.dest])
+
+
+def pad_group_by_slot(
+    slots: np.ndarray, block_b: int, pad_slot: int = 0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side scheduler grouping: pad each slot segment to a block multiple.
+
+    Returns (order, block_slots, row_valid) where ``order`` indexes into the
+    original batch with repeats allowed for padding rows (marked invalid).
+    Guarantees every block is single-slot — the production path for the
+    grouped strategy.
+    """
+    slots = np.asarray(slots)
+    order_parts: list[np.ndarray] = []
+    block_slots: list[int] = []
+    valid_parts: list[np.ndarray] = []
+    for k in np.unique(slots):
+        idx = np.nonzero(slots == k)[0]
+        pad = (-len(idx)) % block_b
+        padded = np.concatenate([idx, np.repeat(idx[-1:], pad)])
+        order_parts.append(padded)
+        valid_parts.append(
+            np.concatenate([np.ones(len(idx), bool), np.zeros(pad, bool)])
+        )
+        block_slots.extend([int(k)] * (len(padded) // block_b))
+    return (
+        np.concatenate(order_parts),
+        np.asarray(block_slots, np.int32),
+        np.concatenate(valid_parts),
+    )
+
+
+# ---------------------------------------------------------------------------
+# generic banked apply
+# ---------------------------------------------------------------------------
+
+def apply_banked(
+    bank: Params,
+    apply_fn: Callable[[Params, jnp.ndarray], jnp.ndarray],
+    x: jnp.ndarray,
+    slots: jnp.ndarray,
+    *,
+    strategy: str = "take",
+) -> jnp.ndarray:
+    """Run ``apply_fn(f_{slots[i]}, x[i])`` for every row under a strategy.
+
+    ``take`` vmaps a per-row gather; ``onehot`` computes all K results per
+    row and contracts (exact, K x FLOPs — only for cheap apply_fns / small K).
+    The grouped strategy lives with the kernels (`repro.kernels.ops`), since
+    it changes the execution layout, not just the math.
+    """
+    if strategy == "take":
+        return jax.vmap(lambda s, xi: apply_fn(select_slot(bank, s), xi))(slots, x)
+    if strategy == "onehot":
+        k = bank_size(bank)
+        all_out = jax.vmap(
+            lambda xi: jax.vmap(lambda s: apply_fn(select_slot(bank, s), xi))(
+                jnp.arange(k)
+            )
+        )(x)  # (B, K, ...)
+        onehot = jax.nn.one_hot(slots, k, dtype=all_out.dtype)
+        return jnp.einsum("bk,bk...->b...", onehot, all_out)
+    raise ValueError(f"unknown strategy {strategy!r}")

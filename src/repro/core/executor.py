@@ -1,0 +1,87 @@
+"""Shared inline BNN executor (paper §II-B, Eq. 1) and its parameter bank.
+
+The executor is *invariant across packets*: one function, one input format
+(256 packed uint32 payload words = 1024 B), one output interface (C scores).
+Only the referenced weight slot varies, resolved from packet metadata.
+
+``h32`` is the paper's structure: d = 8192 input bits, hidden = 32, C = 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bank as bank_lib
+from repro.core import packet as pkt
+from repro.kernels import ops, ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class BNNConfig:
+    d_bits: int = pkt.PAYLOAD_BITS  # 8192
+    hidden: int = 32                # "h32"
+    n_out: int = 1
+
+    @property
+    def words(self) -> int:
+        return self.d_bits // 32
+
+    def param_bytes(self) -> int:
+        """Resident footprint of one slot (packed W1 + b1 + W2 + b2)."""
+        return (
+            self.hidden * self.words * 4
+            + self.hidden * 4
+            + self.n_out * self.hidden * 4
+            + self.n_out * 4
+        )
+
+
+H32 = BNNConfig()
+
+
+def init_params(key, cfg: BNNConfig = H32):
+    return kref.random_bnn_params(key, cfg.d_bits, cfg.hidden, cfg.n_out)
+
+
+def init_bank(key, num_slots: int, cfg: BNNConfig = H32):
+    """Preload K weight sets into a resident bank (paper Eq. 2-3)."""
+    keys = jax.random.split(key, num_slots)
+    return bank_lib.stack_bank([init_params(k, cfg) for k in keys])
+
+
+def pack_real_weights(w1_real: np.ndarray, b1, w2, b2):
+    """Binarize + pack a trained real-valued layer-1 (BinaryConnect-style)."""
+    w1_pm = jnp.where(jnp.asarray(w1_real) >= 0, 1.0, -1.0)
+    return {
+        "w1p": kref.pack_bits(w1_pm),
+        "b1": jnp.asarray(b1, jnp.float32),
+        "w2": jnp.asarray(w2, jnp.float32),
+        "b2": jnp.asarray(b2, jnp.float32),
+    }
+
+
+def forward(params, payload_words, *, backend: str = "auto"):
+    """Single-slot executor: (B, 256) u32 -> (B, C) f32."""
+    return ops.bnn_forward(params, payload_words, backend=backend)
+
+
+def forward_banked(bank, payload_words, slots, *, strategy: str = "take",
+                   backend: str = "auto", block_b: int = 256):
+    """Slot-selected executor over the resident bank."""
+    if strategy in ("take", "onehot"):
+        be = "mxu" if strategy == "onehot" else backend
+        return ops.bnn_forward_banked(bank, payload_words, slots, backend=be)
+    if strategy == "grouped":
+        num_slots = bank_lib.bank_size(bank)
+        bb = min(block_b, payload_words.shape[0])
+        g = bank_lib.group_by_slot_padded(slots, num_slots, bb)
+        x_pad = bank_lib.scatter_padded(payload_words, g)
+        y_pad = ops.bnn_forward_grouped(
+            bank, x_pad, g.block_slots, block_b=bb, backend=backend
+        )
+        return bank_lib.gather_padded(y_pad, g)
+    raise ValueError(f"unknown strategy {strategy!r}")

@@ -1,0 +1,131 @@
+"""BoundSwitch fixed packet representation (paper §II-B).
+
+A packet is ``p = (m_p, x_p)``: seventeen 64-byte register blocks (1088 B).
+
+* ``reg0`` (64 B = 16 uint32 words) carries control metadata:
+    word 0      : Model Slot ID (4 B)            -> selects ``k_p``
+    word 1      : Format / version (4 B)         -> parser compatibility guard
+    words 2..3  : Control / reserved (8 B)       -> action hints for Pi
+    words 4..15 : Padding / spare metadata (48 B)
+* ``reg1..reg16`` (1024 B = 256 uint32 words) carry the payload presented to
+  the BNN executor.
+
+On TPU the x86 "64 B block <-> 512-bit ZMM" alignment maps to lane-aligned
+uint32 words: the payload is 256 words = 2 x 128 lanes, i.e. two full vector
+registers of the (8, 128) VREG tiling.  All host-side helpers are NumPy; all
+device-side helpers are jnp and shape-polymorphic over a leading batch dim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+REG_BYTES = 64
+N_REGS = 17
+PACKET_BYTES = REG_BYTES * N_REGS          # 1088
+PAYLOAD_BYTES = REG_BYTES * (N_REGS - 1)   # 1024
+PAYLOAD_BITS = PAYLOAD_BYTES * 8           # 8192
+
+WORD_BYTES = 4
+PACKET_WORDS = PACKET_BYTES // WORD_BYTES    # 272
+META_WORDS = REG_BYTES // WORD_BYTES         # 16
+PAYLOAD_WORDS = PAYLOAD_BYTES // WORD_BYTES  # 256
+
+SLOT_WORD = 0
+VERSION_WORD = 1
+CONTROL_WORD_LO = 2
+CONTROL_WORD_HI = 3
+
+FORMAT_VERSION = 1
+
+# Pi action codes.
+ACTION_FORWARD = 0
+ACTION_DROP = 1
+ACTION_FLAG = 2  # forward but mark (monitor-only control bit set)
+
+# Control bit 0 of word2: monitor-only (never drop, only flag).
+CTRL_MONITOR_ONLY = np.uint32(1)
+
+
+def make_packets(
+    slots: np.ndarray,
+    payload_words: np.ndarray,
+    *,
+    version: int = FORMAT_VERSION,
+    control: int = 0,
+) -> np.ndarray:
+    """Assemble a batch of fixed-format packets.
+
+    slots: (B,) integer slot ids; payload_words: (B, 256) uint32.
+    Returns (B, 272) uint32.
+    """
+    slots = np.asarray(slots, dtype=np.uint32)
+    payload_words = np.asarray(payload_words, dtype=np.uint32)
+    if payload_words.ndim != 2 or payload_words.shape[1] != PAYLOAD_WORDS:
+        raise ValueError(f"payload must be (B, {PAYLOAD_WORDS}) words, got {payload_words.shape}")
+    b = payload_words.shape[0]
+    if slots.shape != (b,):
+        raise ValueError(f"slots must be ({b},), got {slots.shape}")
+    pkt = np.zeros((b, PACKET_WORDS), dtype=np.uint32)
+    pkt[:, SLOT_WORD] = slots
+    pkt[:, VERSION_WORD] = np.uint32(version)
+    pkt[:, CONTROL_WORD_LO] = np.uint32(control)
+    pkt[:, META_WORDS:] = payload_words
+    return pkt
+
+
+def payload_bytes_to_words(payload: np.ndarray) -> np.ndarray:
+    """(B, 1024) uint8 -> (B, 256) uint32, little-endian within each word."""
+    payload = np.asarray(payload, dtype=np.uint8)
+    if payload.shape[-1] != PAYLOAD_BYTES:
+        raise ValueError(f"payload must have {PAYLOAD_BYTES} bytes")
+    return payload.view("<u4").reshape(*payload.shape[:-1], PAYLOAD_WORDS)
+
+
+# ---------------------------------------------------------------------------
+# Device-side parsing (sigma and friends).  All are trivially O(1) slices —
+# the structural analogue of the paper's "one slot lookup" per packet.
+# ---------------------------------------------------------------------------
+
+def slot_of(packets: jnp.ndarray, num_slots: int) -> jnp.ndarray:
+    """sigma(m_p): extract the model slot index from reg0 word 0.
+
+    Out-of-range ids are clamped into the resident bank (defensive parse);
+    the version guard is handled separately by ``version_ok``.
+    """
+    raw = packets[..., SLOT_WORD].astype(jnp.int32)
+    return jnp.clip(raw, 0, num_slots - 1)
+
+
+def raw_slot_of(packets: jnp.ndarray) -> jnp.ndarray:
+    return packets[..., SLOT_WORD].astype(jnp.int32)
+
+
+def version_ok(packets: jnp.ndarray) -> jnp.ndarray:
+    return packets[..., VERSION_WORD] == jnp.uint32(FORMAT_VERSION)
+
+
+def control_of(packets: jnp.ndarray) -> jnp.ndarray:
+    return packets[..., CONTROL_WORD_LO]
+
+
+def payload_of(packets: jnp.ndarray) -> jnp.ndarray:
+    """x_p: the 256 payload words (reg1..reg16)."""
+    return packets[..., META_WORDS:]
+
+
+def decide_action(packets: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
+    """Pi(m_p, y_p): forwarding action from metadata + inference result.
+
+    Malicious verdict (score > 0) drops, unless the monitor-only control bit
+    is set, in which case the packet is forwarded but flagged.  Benign
+    packets always forward.
+    """
+    malicious = scores > 0.0
+    monitor = (control_of(packets) & CTRL_MONITOR_ONLY) != 0
+    return jnp.where(
+        malicious,
+        jnp.where(monitor, ACTION_FLAG, ACTION_DROP),
+        ACTION_FORWARD,
+    ).astype(jnp.int32)

@@ -1,0 +1,70 @@
+"""The shared forwarding path (paper Algorithm 1).
+
+One jitted function implements the whole per-packet pipeline:
+
+    1. parse slot metadata from reg0
+    2. k_p  <- sigma(m_p)          (O(1) slot extraction)
+    3. resolve resident slot f_{k_p} in the bank
+    4. y_p  <- f_{k_p}(x_p)        (shared BNN executor)
+    5. a_p  <- Pi(m_p, y_p)        (forwarding action)
+
+The parser, executor and forwarding logic are byte-identical across packets
+and across slots — the compiled XLA program never changes; only the slot
+index (data) differs.  The "fixed single-model path" used as the paper's
+baseline operating mode is the same pipeline with sigma replaced by a
+constant.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import executor, packet as pkt
+
+
+class PacketResult(NamedTuple):
+    slots: jnp.ndarray     # (B,) resolved k_p
+    scores: jnp.ndarray    # (B,) y_p (first output column)
+    verdicts: jnp.ndarray  # (B,) bool — malicious?
+    actions: jnp.ndarray   # (B,) int32 Pi output
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "strategy", "backend", "fixed_slot")
+)
+def packet_step(
+    bank,
+    packets: jnp.ndarray,  # (B, 272) uint32
+    *,
+    num_slots: int,
+    strategy: str = "take",
+    backend: str = "auto",
+    fixed_slot: int | None = None,
+) -> PacketResult:
+    """Process one batch of packets along the shared forwarding path."""
+    if fixed_slot is None:
+        slots = pkt.slot_of(packets, num_slots)           # sigma(m_p)
+    else:  # baseline operating mode: fixed single-model path
+        slots = jnp.full(packets.shape[:1], fixed_slot, jnp.int32)
+    payload = pkt.payload_of(packets)                     # x_p
+    scores = executor.forward_banked(
+        bank, payload, slots, strategy=strategy, backend=backend
+    )[:, 0]                                               # y_p
+    actions = pkt.decide_action(packets, scores)          # Pi(m_p, y_p)
+    return PacketResult(slots, scores, scores > 0.0, actions)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def slot_select_only(packets: jnp.ndarray, num_slots: int, *, backend="auto"):
+    """Isolated sigma for the Fig. 4 / Fig. 5 microbenchmarks."""
+    return pkt.slot_of(packets, num_slots)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def inference_only(params, payload_words, *, backend: str = "auto"):
+    """Isolated single-slot inference for the Fig. 4 breakdown."""
+    return executor.forward(params, payload_words, backend=backend)

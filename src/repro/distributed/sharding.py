@@ -1,0 +1,228 @@
+"""Path-based sharding rules -> PartitionSpec trees, with auto-legalization.
+
+Every parameter leaf is matched by the *suffix* of its tree path against a
+rule table; the rule yields logical axes for the trailing dims (leading
+stacked dims — layers / groups / bank slots — are always replicated).
+Logical axes map to mesh axes per run:
+
+    tp   -> "model"
+    fsdp -> "data"  (only when the run enables FSDP; else replicated)
+    dp   -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+
+``legalize`` drops any spec entry whose dim is not divisible by the mapped
+mesh-axis size (e.g. glm4's 2 kv heads over 16-way TP, smollm's 15 heads) —
+GSPMD would otherwise reject the sharding.  Dropped entries are recorded so
+the dry-run can report them (they are hillclimb candidates: padding the dim
+recovers the sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    tp_axis: str = "model"
+    fsdp_axis: Optional[str] = None     # set to "data" to enable FSDP/ZeRO
+    dp_axes: tuple = ("data",)          # batch axes
+    style: str = "1d"                   # "1d" (baseline) | "2d" (serve:
+                                        # weights shard OUTPUT dims over
+                                        # (fsdp x tp); contraction dims never
+                                        # shard, so no partial-sum
+                                        # all-reduces of huge activations)
+
+
+# rule table: (path regex, logical axes for the TRAILING dims)
+# logical names: "tp", "fsdp", None
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/embedding$",        ("tp", "fsdp")),
+    (r"head/w$",                 ("fsdp", "tp")),
+    (r"bank_head/w$",            (None, "fsdp", "tp")),
+    (r"attn/w[qkv]$",            ("fsdp", "tp")),
+    (r"attn/wo$",                ("tp", "fsdp")),
+    (r"self_attn/w[qkv]$",       ("fsdp", "tp")),
+    (r"self_attn/wo$",           ("tp", "fsdp")),
+    (r"cross_attn/w[qkv]$",      ("fsdp", "tp")),
+    (r"cross_attn/wo$",          ("tp", "fsdp")),
+    (r"mlp/w[gu]$",              ("fsdp", "tp")),
+    (r"mlp/wd$",                 ("tp", "fsdp")),
+    (r"moe/router$",             (None, None)),
+    (r"moe/w[gu]$",              ("tp", "fsdp", None)),   # experts over model
+    (r"moe/wd$",                 ("tp", None, "fsdp")),
+    (r"mamba/in_proj$",          ("fsdp", "tp")),
+    (r"mamba/out_proj$",         ("tp", "fsdp")),
+    (r"mamba/conv_w$",           (None, "tp")),
+    (r"mamba/conv_b$",           ("tp",)),
+    (r"adapter/a$",              (None, "tp", None)),     # (K, d@tp, r)
+    (r"adapter/b$",              (None, None, "tp")),     # (K, r, out@tp)
+    (r"frontend_proj/w$",        (None, "tp")),
+    (r"frame_proj/w$",           (None, "tp")),
+    (r"(norm|ln\d|scale)",       None),                   # norms: replicate
+]
+
+
+# "2d" serve style: every matrix shards only its OUTPUT dim, jointly over
+# (fsdp, tp) where available.  "both" maps to the (fsdp_axis, tp_axis) tuple.
+_PARAM_RULES_2D: list[tuple[str, tuple]] = [
+    (r"embed/embedding$",        ("tp", "fsdp")),   # gather, not contraction
+    (r"head/w$",                 (None, "both")),
+    (r"bank_head/w$",            (None, None, "both")),
+    (r"(attn|self_attn|cross_attn)/w[qkv]$", (None, "both")),
+    (r"(attn|self_attn|cross_attn)/wo$",     (None, "both")),
+    (r"mlp/w[gud]$",             (None, "both")),
+    (r"moe/router$",             (None, None)),
+    (r"moe/w[gud]$",             ("tp", None, "fsdp")),
+    (r"mamba/in_proj$",          (None, "both")),
+    (r"mamba/out_proj$",         (None, "both")),
+    (r"mamba/conv_w$",           (None, "tp")),
+    (r"mamba/conv_b$",           ("tp",)),
+    (r"adapter/a$",              (None, "tp", None)),
+    (r"adapter/b$",              (None, None, "tp")),
+    (r"frontend_proj/w$",        (None, "tp")),
+    (r"frame_proj/w$",           (None, "tp")),
+    (r"(norm|ln\d|scale)",       None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _logical_to_mesh(logical, rules: ShardingRules):
+    if logical == "tp":
+        return rules.tp_axis
+    if logical == "fsdp":
+        return rules.fsdp_axis
+    if logical == "both":
+        axes = tuple(a for a in (rules.fsdp_axis, rules.tp_axis) if a)
+        return axes if len(axes) > 1 else (axes[0] if axes else None)
+    return None
+
+
+def spec_for_path(path_s: str, ndim: int, rules: ShardingRules) -> P:
+    table = _PARAM_RULES_2D if rules.style == "2d" else _PARAM_RULES
+    for pattern, trailing in table:
+        if re.search(pattern, path_s):
+            if trailing is None:
+                return P()
+            axes = [_logical_to_mesh(a, rules) for a in trailing]
+            lead = [None] * max(0, ndim - len(axes))
+            return P(*(lead + axes[-ndim:] if ndim < len(axes) else lead + axes))
+    return P()  # default: replicate
+
+
+def param_specs(params_tree, rules: ShardingRules):
+    """PartitionSpec tree matching ``params_tree`` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(_path_str(path), np.ndim(leaf) or len(leaf.shape), rules),
+        params_tree,
+    )
+
+
+def legalize(spec_tree, shape_tree, mesh: Mesh):
+    """Drop spec entries whose dims don't divide the mesh axis size.
+
+    Returns (legal_spec_tree, dropped: list[(path, dim, axis)]).
+    """
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dropped: list = []
+
+    def fix(path, spec, leaf):
+        shape = leaf.shape
+        new = []
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(shape):
+                new.append(None if i < len(shape) else None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([axis_size[a] for a in axes]))
+            if shape[i] % total == 0:
+                new.append(entry)
+            else:
+                dropped.append((_path_str(path), i, entry))
+                new.append(None)
+        return P(*new[: len(shape)])
+
+    legal = jax.tree_util.tree_map_with_path(
+        lambda path, spec, leaf: fix(path, spec, leaf), spec_tree, shape_tree
+    )
+    return legal, dropped
+
+
+def batch_specs(batch_tree, rules: ShardingRules):
+    """Batch dims shard over dp axes; everything else replicated."""
+    dp = tuple(a for a in rules.dp_axes if a)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return P(dp if len(dp) > 1 else dp[0], *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def cache_specs(cache_tree, rules: ShardingRules):
+    """KV / SSM caches: leading stacked dims replicated, batch dim over dp.
+
+    Cache leaves look like (L, B, G, Lc, hd) / (L, B, H, P, N) /
+    (groups, L, B, ...) — the batch dim is the one right after the stacked
+    layer dims.  We mark dims conservatively: shard the first dim of size
+    divisible by dp product that follows the leading layer dims.
+    """
+    dp = tuple(a for a in rules.dp_axes if a)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        # batch dim index: kv caches "k"/"v" -> (L, B, ...); mamba state
+        # "ssm"/"conv" -> (..., n, B, ...).  Identify as the dim after all
+        # leading "stack" dims; we place it by name.
+        name = _path_str(path)
+        nd = len(shape)
+        entries = [None] * nd
+        if re.search(r"(^|/)(k|v)$", name) and nd >= 2:
+            entries[1] = dp_entry
+        elif re.search(r"(ssm|conv)$", name) and nd >= 2:
+            # batch dim: for (n, B, ...) it's 1; for (groups, n, B, ...) it's 2
+            bdim = nd - 4 if name.endswith("ssm") else nd - 3
+            entries[max(bdim, 0)] = dp_entry
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def opt_state_specs(param_spec_tree, opt_state):
+    """Optimizer state shards like its params (m/v/master mirror the tree)."""
+    specs = {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "step": P(),
+    }
+    if "master" in opt_state:
+        specs["master"] = param_spec_tree
+    return specs
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,131 @@
+"""Jitted public wrappers over the Pallas kernels with oracle fallbacks.
+
+Backend selection:
+  * ``pallas``    — compiled Pallas kernel (TPU target; ``interpret=True``
+                    under tests on CPU).
+  * ``ref``       — pure-jnp oracle (fast on CPU; bit-identical semantics).
+  * ``mxu``       — beyond-paper path: unpack bits to +-1 bf16 and contract
+                    on the MXU instead of VPU popcount.
+  * ``auto``      — ``pallas`` on TPU, ``ref`` elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from . import bnn_xnor as _bnn_xnor
+from . import banked_matmul as _banked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# binary (XNOR-popcount) matmul
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def xnor_matmul(x_packed, w_packed, *, backend: str = "auto"):
+    """(B, W)u32 x (H, W)u32 -> (B, H)i32 binary dot products."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.xnor_matmul_ref(x_packed, w_packed)
+    if backend == "mxu":
+        return _ref.xnor_matmul_mxu_ref(x_packed, w_packed)
+    return _bnn_xnor.xnor_matmul(
+        x_packed, w_packed, interpret=not _on_tpu()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def bnn_forward(params, x_packed, *, backend: str = "auto"):
+    """Single-slot BNN forward (paper Eq. 1): -> (B, C) f32 scores."""
+    pre = xnor_matmul(x_packed, params["w1p"], backend=backend).astype(jnp.float32)
+    pre = pre + params["b1"][None, :]
+    h = jnp.where(pre >= 0, 1.0, -1.0)
+    return h @ params["w2"].T + params["b2"][None, :]
+
+
+# ---------------------------------------------------------------------------
+# banked (slot-selected) execution
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def bnn_forward_banked(bank, x_packed, slots, *, backend: str = "auto"):
+    """Per-packet slot-selected BNN forward (gather/onehot semantics).
+
+    bank leaves are stacked (K, ...).  Exact per-packet granularity — the
+    grouped Pallas path lives in ``bnn_forward_grouped``.
+    """
+    backend = _resolve(backend)
+    if backend == "mxu":
+        # onehot-style MXU contraction: selection becomes a K-contraction.
+        d = x_packed.shape[-1] * _ref.PACK
+        xv = _ref.unpack_bits(x_packed, d).astype(jnp.bfloat16)   # (B, d)
+        wv = _ref.unpack_bits(bank["w1p"], d).astype(jnp.bfloat16)  # (K, H, d)
+        onehot = jax.nn.one_hot(slots, bank["w1p"].shape[0], dtype=jnp.bfloat16)
+        pre = jnp.einsum(
+            "bd,khd,bk->bh", xv, wv, onehot,
+            preferred_element_type=jnp.float32,
+        )
+        pre = pre + bank["b1"][slots]
+        h = jnp.where(pre >= 0, 1.0, -1.0)
+        y = jnp.einsum("bh,bch->bc", h, bank["w2"][slots]) + bank["b2"][slots]
+        return y
+    return _ref.banked_xnor_forward_ref(
+        bank["w1p"], bank["b1"], bank["w2"], bank["b2"], x_packed, slots
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "backend"))
+def bnn_forward_grouped(
+    bank, x_packed, block_slots, *, block_b: int = 256, backend: str = "auto"
+):
+    """Grouped slot-selected BNN forward via the scalar-prefetch kernel.
+
+    Rows must be pre-grouped so each ``block_b`` block shares a slot
+    (``repro.core.bank.group_by_slot``).  block_slots: (B // block_b,) i32.
+    """
+    backend = _resolve(backend)
+    interpret = not _on_tpu()
+    bsz = x_packed.shape[0]
+    bb = min(block_b, bsz)
+    if backend == "ref":
+        slots = jnp.repeat(block_slots, bb, total_repeat_length=bsz)
+        return _ref.banked_xnor_forward_ref(
+            bank["w1p"], bank["b1"], bank["w2"], bank["b2"], x_packed, slots
+        )
+    pre = _banked.banked_xnor_layer1(
+        x_packed, bank["w1p"], bank["b1"], block_slots,
+        block_b=bb, interpret=interpret,
+    )
+    h = jnp.where(pre >= 0, 1.0, -1.0)
+    y = jnp.einsum("bh,bch->bc", h, bank["w2"][jnp.repeat(
+        block_slots, bb, total_repeat_length=bsz)])
+    y = y + bank["b2"][jnp.repeat(block_slots, bb, total_repeat_length=bsz)]
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "backend"))
+def banked_matmul(x, w, b, block_slots, *, block_b: int = 128, backend: str = "auto"):
+    """Grouped slot-selected float matmul (adapter/head banks)."""
+    backend = _resolve(backend)
+    bsz = x.shape[0]
+    bb = min(block_b, bsz)
+    if backend == "ref":
+        slots = jnp.repeat(block_slots, bb, total_repeat_length=bsz)
+        return _ref.banked_matmul_ref(x, w, b, slots)
+    return _banked.banked_matmul(
+        x, w, b, block_slots, block_b=bb, interpret=not _on_tpu()
+    )

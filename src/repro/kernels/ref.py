@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Conventions
+-----------
+* Bit packing: a {+1,-1} vector is stored as uint32 words, little-endian
+  within the word; bit ``b`` encodes value ``1 - 2b`` (bit 0 -> +1,
+  bit 1 -> -1).
+* ``d`` (input bits) must be a multiple of 32.
+* The binary dot product of two +-1 vectors of length d packed as words
+  x, w is ``d - 2 * popcount(x XOR w)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PACK = 32
+
+
+# ---------------------------------------------------------------------------
+# packing helpers (host + device safe)
+# ---------------------------------------------------------------------------
+
+def pack_bits(x_pm1: jnp.ndarray) -> jnp.ndarray:
+    """Pack a (+1/-1) array of shape (..., d) into (..., d//32) uint32."""
+    d = x_pm1.shape[-1]
+    if d % PACK:
+        raise ValueError(f"d={d} must be a multiple of {PACK}")
+    bits = (x_pm1 < 0).astype(jnp.uint32)          # bit 1 <=> -1
+    bits = bits.reshape(*x_pm1.shape[:-1], d // PACK, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Inverse of pack_bits -> (+1/-1) int8 of shape (..., d)."""
+    if d != packed.shape[-1] * PACK:
+        raise ValueError("d mismatch")
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*packed.shape[:-1], d)
+    return (1 - 2 * bits.astype(jnp.int8)).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# kernel oracles
+# ---------------------------------------------------------------------------
+
+def xnor_matmul_ref(x_packed: jnp.ndarray, w_packed: jnp.ndarray) -> jnp.ndarray:
+    """Binary matmul oracle.
+
+    x_packed: (B, W) uint32, w_packed: (H, W) uint32 -> (B, H) int32 dot
+    products of the underlying +-1 vectors of length d = W*32.
+    """
+    d = x_packed.shape[-1] * PACK
+    xor = jnp.bitwise_xor(x_packed[:, None, :], w_packed[None, :, :])
+    mism = jax.lax.population_count(xor).astype(jnp.int32).sum(axis=-1)
+    return jnp.int32(d) - 2 * mism
+
+
+def bnn_forward_ref(
+    w1_packed: jnp.ndarray,  # (H, W) uint32
+    b1: jnp.ndarray,         # (H,) float32
+    w2: jnp.ndarray,         # (C, H) float32
+    b2: jnp.ndarray,         # (C,) float32
+    x_packed: jnp.ndarray,   # (B, W) uint32
+) -> jnp.ndarray:
+    """h = sign(W1 x + b1); y = W2 h + b2   (paper Eq. 1).  -> (B, C) f32."""
+    pre = xnor_matmul_ref(x_packed, w1_packed).astype(jnp.float32) + b1[None, :]
+    h = jnp.where(pre >= 0, 1.0, -1.0)
+    return h @ w2.T + b2[None, :]
+
+
+def banked_matmul_ref(
+    x: jnp.ndarray,      # (B, D)
+    w: jnp.ndarray,      # (K, D, H)
+    b: jnp.ndarray,      # (K, H) or None
+    slots: jnp.ndarray,  # (B,) int32
+) -> jnp.ndarray:
+    """Slot-selected matmul oracle: y[i] = x[i] @ w[slots[i]] + b[slots[i]]."""
+    wg = w[slots]                       # (B, D, H)
+    y = jnp.einsum("bd,bdh->bh", x, wg)
+    if b is not None:
+        y = y + b[slots]
+    return y.astype(x.dtype)
+
+
+def banked_xnor_forward_ref(
+    bank_w1: jnp.ndarray,  # (K, H, W) uint32
+    bank_b1: jnp.ndarray,  # (K, H) f32
+    bank_w2: jnp.ndarray,  # (K, C, H) f32
+    bank_b2: jnp.ndarray,  # (K, C) f32
+    x_packed: jnp.ndarray, # (B, W) uint32
+    slots: jnp.ndarray,    # (B,) int32
+) -> jnp.ndarray:
+    """Per-packet slot-selected BNN forward (gather strategy oracle)."""
+    d = x_packed.shape[-1] * PACK
+    w1g = bank_w1[slots]                              # (B, H, W)
+    xor = jnp.bitwise_xor(x_packed[:, None, :], w1g)  # (B, H, W)
+    mism = jax.lax.population_count(xor).astype(jnp.int32).sum(axis=-1)
+    pre = (jnp.int32(d) - 2 * mism).astype(jnp.float32) + bank_b1[slots]
+    h = jnp.where(pre >= 0, 1.0, -1.0)                # (B, H)
+    y = jnp.einsum("bh,bch->bc", h, bank_w2[slots]) + bank_b2[slots]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MXU-path oracle (beyond-paper TPU adaptation): unpack to +-1 bf16 and use
+# the systolic array instead of VPU popcount.
+# ---------------------------------------------------------------------------
+
+def xnor_matmul_mxu_ref(x_packed: jnp.ndarray, w_packed: jnp.ndarray) -> jnp.ndarray:
+    d = x_packed.shape[-1] * PACK
+    xv = unpack_bits(x_packed, d).astype(jnp.bfloat16)
+    wv = unpack_bits(w_packed, d).astype(jnp.bfloat16)
+    return jnp.dot(xv, wv.T, preferred_element_type=jnp.float32).astype(jnp.int32)
+
+
+def random_bnn_params(key, d_bits: int, hidden: int, n_out: int = 1):
+    """Random single-slot BNN parameter set (packed)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    w1 = jnp.where(jax.random.bernoulli(k1, 0.5, (hidden, d_bits)), 1.0, -1.0)
+    w1p = pack_bits(w1)
+    b1 = jax.random.normal(k2, (hidden,), jnp.float32) * 8.0
+    w2 = jax.random.normal(k3, (n_out, hidden), jnp.float32) / np.sqrt(hidden)
+    b2 = jax.random.normal(k4, (n_out,), jnp.float32) * 0.1
+    return {"w1p": w1p, "b1": b1, "w2": w2, "b2": b2}

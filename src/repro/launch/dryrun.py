@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init); they give this process 512 placeholder CPU devices so
+``jax.make_mesh`` can build the production meshes:
+
+    single-pod:  (16, 16)    ("data", "model")       = 256 chips
+    multi-pod:   (2, 16, 16) ("pod", "data", "model") = 512 chips
+
+For each cell the step function (train / prefill / serve) is jitted with
+explicit in/out shardings, ``.lower()``-ed on ShapeDtypeStructs (no
+allocation) and ``.compile()``-d; we record ``memory_analysis()``,
+``cost_analysis()`` and the loop-aware roofline terms parsed from the
+optimized HLO (repro.distributed.roofline).
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ShapeConfig, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.distributed import roofline as rf
+from repro.distributed import sharding as sh
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+# FSDP thresholds (param count): above these, weights/opt-state shard over
+# the data axis too (ZeRO-3 semantics via GSPMD).
+FSDP_TRAIN_THRESHOLD = 2e9
+FSDP_SERVE_THRESHOLD = 50e9
+
+
+def rules_for(cfg, kind: str, mesh, style: str = "1d") -> sh.ShardingRules:
+    n = cfg.param_count()
+    thresh = FSDP_TRAIN_THRESHOLD if kind == "train" else FSDP_SERVE_THRESHOLD
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return sh.ShardingRules(
+        tp_axis="model",
+        fsdp_axis="data" if n > thresh else None,
+        dp_axes=dp,
+        style=style,
+    )
+
+
+# Perf-iteration variants (EXPERIMENTS.md §Perf).  "baseline" is the
+# paper-faithful default; everything else is a beyond-paper optimization.
+VARIANTS = {
+    "baseline": {},
+    "flashremat": {"cfg": {"flash_remat": True}},
+    "seqshard": {"cfg": {"seq_shard_attention": True}},
+    "flashremat+seqshard": {"cfg": {"flash_remat": True,
+                                    "seq_shard_attention": True}},
+    "serve2d": {"style": "2d"},
+    "serve2d+seqshard": {"style": "2d", "cfg": {"seq_shard_attention": True}},
+    "int8cache": {"cfg": {"cache_dtype": "int8"}},
+    # Megatron-style sequence parallelism: the token stream itself is
+    # sharded over the TP axis, so per-layer activation collectives move
+    # (B, S/16, d) instead of (B, S, d)
+    "seqpar": {"style": "2d", "batch_seq_shard": True,
+               "cfg": {"seq_shard_attention": True}},
+    # + explicit Megatron-SP constraints on the residual stream (GSPMD drops
+    # the input-level seq sharding otherwise)
+    "seqpar2": {"style": "2d", "batch_seq_shard": True,
+                "cfg": {"seq_shard_attention": True,
+                        "seq_shard_activations": True}},
+}
+
+
+def _legal_batch_specs(batch_sds, rules, mesh):
+    specs = sh.batch_specs(batch_sds, rules)
+    return sh.legalize(specs, batch_sds, mesh)
+
+
+def _decode_cache_specs(cache_sds, rules, mesh):
+    """KV caches: batch over dp, kv-heads over model (seq as fallback)."""
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axis_size.get(rules.tp_axis, 1)
+    dp = tuple(a for a in rules.dp_axes if a)
+    dp_total = 1
+    for a in dp:
+        dp_total *= axis_size.get(a, 1)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        name = sh._path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        entries = [None] * nd
+        if re.search(r"(^|/)(k|v)(_scale)?$", name):
+            # (L, B, G, Lc[, hd]) — scales lack the trailing hd dim
+            if dp_entry and shape[1] % dp_total == 0:
+                entries[1] = dp_entry
+            if shape[2] % tp == 0:
+                entries[2] = rules.tp_axis
+            elif shape[3] % tp == 0:
+                entries[3] = rules.tp_axis  # seq-dim fallback (glm/arctic/llava)
+        else:
+            bdim = nd - 4 if name.endswith("ssm") else nd - 3
+            if dp_entry and shape[bdim] % dp_total == 0:
+                entries[bdim] = dp_entry
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_sds)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None, variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    vspec = VARIANTS[variant]
+    v_over = dict(vspec.get("cfg", {}))
+    if overrides:
+        v_over.update(overrides)
+    if v_over:
+        cfg = dataclasses.replace(cfg, **v_over)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch}|{shape_name}|{mesh_name}"
+    if variant != "baseline":
+        cell_id += f"|{variant}"
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"cell": cell_id, "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = shape.kind
+    rules = rules_for(cfg, kind, mesh, style=vspec.get("style", "1d"))
+    cell = specs_lib.input_specs(cfg, shape)
+    result = {"cell": cell_id, "arch": arch, "shape": shape_name,
+              "mesh": mesh_name, "kind": kind, "variant": variant,
+              "fsdp": rules.fsdp_axis is not None}
+
+    with mesh:
+        if kind == "train":
+            state_sds, batch_sds = cell["state"], cell["batch"]
+            pspecs = sh.param_specs(state_sds["params"], rules)
+            pspecs, dropped = sh.legalize(pspecs, state_sds["params"], mesh)
+            state_specs = {
+                "params": pspecs,
+                "opt": sh.opt_state_specs(pspecs, state_sds["opt"]),
+                "step": P(),
+            }
+            bspecs, bdropped = _legal_batch_specs(batch_sds, rules, mesh)
+            step = ts_lib.make_train_step(cfg, cell["opt_cfg"])
+            jstep = jax.jit(
+                step,
+                in_shardings=(sh.named(mesh, state_specs), sh.named(mesh, bspecs)),
+                donate_argnums=(0,),
+            )
+            lowered = jstep.lower(state_sds, batch_sds)
+        elif kind == "prefill":
+            params_sds, batch_sds = cell["params"], cell["batch"]
+            pspecs, dropped = sh.legalize(
+                sh.param_specs(params_sds, rules), params_sds, mesh)
+            bspecs, bdropped = _legal_batch_specs(batch_sds, rules, mesh)
+            if vspec.get("batch_seq_shard"):
+                def seq_shard(spec, leaf):
+                    if len(leaf.shape) >= 2 and leaf.shape[1] % 16 == 0:
+                        return P(spec[0], rules.tp_axis,
+                                 *spec[2:len(leaf.shape)])
+                    return spec
+                bspecs = jax.tree_util.tree_map(
+                    seq_shard, bspecs, batch_sds,
+                    is_leaf=lambda x: isinstance(x, P))
+            step = ts_lib.make_prefill_step(cfg)
+            jstep = jax.jit(
+                step,
+                in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, bspecs)),
+            )
+            lowered = jstep.lower(params_sds, batch_sds)
+        else:  # decode
+            params_sds = cell["params"]
+            pspecs, dropped = sh.legalize(
+                sh.param_specs(params_sds, rules), params_sds, mesh)
+            cache_specs = _decode_cache_specs(cell["cache"], rules, mesh)
+            cache_specs, cdropped = sh.legalize(cache_specs, cell["cache"], mesh)
+            tok_spec, tdropped = _legal_batch_specs(cell["tokens"], rules, mesh)
+            step = ts_lib.make_serve_step(cfg)
+            args = [cell["tokens"], cell["cache"], cell["cache_len"]]
+            in_shard = [sh.named(mesh, pspecs), sh.named(mesh, tok_spec),
+                        sh.named(mesh, cache_specs), sh.named(mesh, P())]
+            if cell["slot_ids"] is not None:
+                sspec, _ = _legal_batch_specs(cell["slot_ids"], rules, mesh)
+                args.append(cell["slot_ids"])
+                in_shard.append(sh.named(mesh, sspec))
+            jstep = jax.jit(
+                step, in_shardings=tuple(in_shard), donate_argnums=(2,)
+            )
+            lowered = jstep.lower(params_sds, *args)
+
+        compiled = lowered.compile()
+
+    result["dropped_shardings"] = [f"{p}[{d}]@{a}" for (p, d, a) in dropped]
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total": (
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+            ),
+        }
+    except Exception as e:  # pragma: no cover
+        result["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        result["xla_cost"] = {
+            "flops": ca.get("flops"), "bytes accessed": ca.get("bytes accessed")
+        }
+    except Exception as e:  # pragma: no cover
+        result["xla_cost"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    analysis = rf.analyze(hlo)
+    result["analysis"] = {
+        "dot_flops": analysis["dot_flops"],
+        "hbm_bytes": analysis["hbm_bytes"],
+        "collective_bytes": analysis["collective_bytes"],
+        "collective_bytes_total": analysis["collective_bytes_total"],
+    }
+    result["roofline"] = rf.roofline_terms(analysis, result.get("xla_cost"))
+    n_dev = mesh.devices.size
+    mf = rf.model_flops(cfg, shape, kind)
+    result["model_flops_global"] = mf
+    global_dot = analysis["dot_flops"] * n_dev
+    result["useful_flops_ratio"] = mf / global_dot if global_dot else None
+    result["params"] = cfg.param_count()
+    result["active_params"] = cfg.active_param_count()
+    result["compile_seconds"] = time.time() - t0
+    result["status"] = "ok"
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=[a for a in ARCH_IDS if a != "boundswitch-h32"])
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    cells = []
+    archs = [a for a in ARCH_IDS if a != "boundswitch-h32"] if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    for a, s, m in cells:
+        try:
+            res = run_cell(a, s, multi_pod=(m == "multi"),
+                           variant=args.variant)
+        except Exception as e:
+            res = {"cell": f"{a}|{s}|{m}|{args.variant}", "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        line = {k: res.get(k) for k in ("cell", "status", "reason", "error")}
+        print(json.dumps(line))
+        if res.get("status") == "ok":
+            r = res["roofline"]
+            print(f"  compute={r['compute_s']*1e3:.3f}ms memory={r['memory_s']*1e3:.3f}ms "
+                  f"collective={r['collective_s']*1e3:.3f}ms dominant={r['dominant']} "
+                  f"mem/dev={res['memory'].get('per_device_total', 0)/2**30:.2f}GiB "
+                  f"compile={res['compile_seconds']:.0f}s")
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            fname = res["cell"].replace("|", "_") + ".json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No allocation ever happens here: batches, caches and train state are built
+with ``jax.eval_shape`` / ShapeDtypeStructs (weak-type-correct, shardable).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        # split the position budget between encoder frames and decoder tokens
+        s_half = s // 2
+        return {
+            "frames": _sds((b, s_half, cfg.d_model), cfg.dtype),
+            "tokens": _sds((b, s_half), jnp.int32),
+            "labels": _sds((b, s_half), jnp.int32),
+            "loss_mask": _sds((b, s_half), jnp.float32),
+        }
+    batch = {}
+    s_text = s
+    if cfg.frontend == "patch":
+        s_text = s - cfg.frontend_len
+        batch["patch_embeds"] = _sds((b, cfg.frontend_len, cfg.d_model), cfg.dtype)
+    batch["tokens"] = _sds((b, s_text), jnp.int32)
+    batch["labels"] = _sds((b, s_text), jnp.int32)
+    batch["loss_mask"] = _sds((b, s_text), jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        s_half = s // 2
+        return {
+            "frames": _sds((b, s_half, cfg.d_model), cfg.dtype),
+            "tokens": _sds((b, s_half), jnp.int32),
+        }
+    batch = {}
+    s_text = s
+    if cfg.frontend == "patch":
+        s_text = s - cfg.frontend_len
+        batch["patch_embeds"] = _sds((b, cfg.frontend_len, cfg.d_model), cfg.dtype)
+    batch["tokens"] = _sds((b, s_text), jnp.int32)
+    if cfg.bank_mode in ("adapter", "head"):
+        batch["slot_ids"] = _sds((b,), jnp.int32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, cache, cache_len, slot_ids) ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, b, s))
+    tokens = _sds((b, 1), jnp.int32)
+    cache_len = _sds((), jnp.int32)
+    slot_ids = (
+        _sds((b,), jnp.int32) if cfg.bank_mode in ("adapter", "head") else None
+    )
+    return tokens, cache, cache_len, slot_ids
+
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig):
+    return jax.eval_shape(
+        lambda k: ts_lib.init_train_state(k, cfg, opt_cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+def param_shape_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: api.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                opt_cfg: opt_lib.OptimizerConfig | None = None) -> dict:
+    """Everything the dry-run needs for one cell, keyed by step kind."""
+    opt_cfg = opt_cfg or opt_lib.OptimizerConfig(
+        moments_dtype=cfg.moments_dtype,
+        master_weights=cfg.master_weights,
+    )
+    if shape.kind == "train":
+        return {
+            "kind": "train",
+            "state": train_state_specs(cfg, opt_cfg),
+            "batch": train_batch_specs(cfg, shape),
+            "opt_cfg": opt_cfg,
+        }
+    if shape.kind == "prefill":
+        return {
+            "kind": "prefill",
+            "params": param_shape_specs(cfg),
+            "batch": prefill_batch_specs(cfg, shape),
+        }
+    if shape.kind == "decode":
+        tokens, cache, cache_len, slot_ids = decode_input_specs(cfg, shape)
+        return {
+            "kind": "decode",
+            "params": param_shape_specs(cfg),
+            "tokens": tokens,
+            "cache": cache,
+            "cache_len": cache_len,
+            "slot_ids": slot_ids,
+        }
+    raise ValueError(shape.kind)

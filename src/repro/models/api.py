@@ -1,0 +1,33 @@
+"""Unified model API: one entry point per step kind, family-dispatched."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as _encdec
+from repro.models import lm as _lm
+
+
+def init(key, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return _encdec.encdec_init(key, cfg)
+    return _lm.lm_init(key, cfg)
+
+
+def apply(params, batch, cfg: ModelConfig, *, return_cache: bool = False):
+    """Full-sequence forward -> (logits, aux[, cache])."""
+    if cfg.family == "encdec":
+        return _encdec.encdec_apply(params, batch, cfg, return_cache=return_cache)
+    return _lm.lm_apply(params, batch, cfg, return_cache=return_cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    if cfg.family == "encdec":
+        return _encdec.init_cache(cfg, batch, seq_len, dtype)
+    return _lm.init_cache(cfg, batch, seq_len, dtype)
+
+
+def decode_step(params, tokens, cache, cache_len, cfg: ModelConfig, slot_ids=None):
+    if cfg.family == "encdec":
+        return _encdec.encdec_decode_step(params, tokens, cache, cache_len, cfg,
+                                          slot_ids)
+    return _lm.lm_decode_step(params, tokens, cache, cache_len, cfg, slot_ids)

@@ -1,0 +1,206 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d).  Decoder layers carry causal
+self-attention plus cross-attention into the encoder memory; at decode time
+the per-layer cross K/V are precomputed once (prefill) and read-only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.nn import modules as nn
+
+
+def _cross_attention_init(key, cfg: ModelConfig) -> dict:
+    return nn.attention_init(key, cfg)  # same shapes; no RoPE at apply time
+
+
+def _cross_attention_apply(params, x, memory_kv, cfg: ModelConfig):
+    """x: (B, Sq, d); memory_kv: precomputed {"k","v"}: (B, G, Sm, D)."""
+    bsz, sq, _ = x.shape
+    hq, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    gq = hq // g
+    q = (x @ params["wq"]).reshape(bsz, sq, g, gq, hd).transpose(0, 2, 3, 1, 4)
+    k, v = memory_kv["k"], memory_kv["v"]
+    scores = jnp.einsum(
+        "bghqd,bgkd->bghqk", q, k, preferred_element_type=jnp.float32
+    ) * (hd ** -0.5)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bghqk,bgkd->bghqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq * hd)
+    return out @ params["wo"]
+
+
+def cross_kv(params, memory, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder memory: (B, Sm, d)."""
+    bsz, sm, _ = memory.shape
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (memory @ params["wk"]).reshape(bsz, sm, g, hd).transpose(0, 2, 1, 3)
+    v = (memory @ params["wv"]).reshape(bsz, sm, g, hd).transpose(0, 2, 1, 3)
+    return {"k": k, "v": v}
+
+
+def _enc_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "attn": nn.attention_init(k1, cfg),
+        "ln2": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "mlp": nn.mlp_init(k2, cfg),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "self_attn": nn.attention_init(k1, cfg),
+        "ln2": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "cross_attn": _cross_attention_init(k2, cfg),
+        "ln3": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "mlp": nn.mlp_init(k3, cfg),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig) -> dict:
+    ke, kenc, kdec, kin, kh, kb = jax.random.split(key, 6)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_dec_layers)
+    params = {
+        "frame_proj": {"w": nn._dense_init(kin, (cfg.d_model, cfg.d_model),
+                                           nn.cdtype(cfg))},
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "enc_norm": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "embed": nn.embed_init(ke, cfg),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "final_norm": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "head": nn.head_init(kh, cfg),
+    }
+    if cfg.bank_mode == "head":
+        params["bank_head"] = {
+            "w": nn._dense_init(kb, (cfg.bank_slots, cfg.d_model, cfg.padded_vocab),
+                                nn.cdtype(cfg))
+        }
+    return params
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S_enc, d) stub frame embeddings -> encoder memory."""
+    x = frames.astype(nn.cdtype(cfg)) @ params["frame_proj"]["w"]
+    bsz, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (bsz, s))
+
+    def body(x, lp):
+        h, _ = nn.attention_apply(
+            lp["attn"], nn.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+            positions=positions, causal=False,
+        )
+        x = x + h
+        return x + nn.mlp_apply(lp["mlp"], nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)), None
+
+    x, _ = lax.scan(lambda c, lp: _maybe_remat(body, cfg)(c, lp), x,
+                    params["enc_layers"])
+    return nn.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _final_logits(params, x, cfg, slot_ids=None):
+    x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.bank_mode == "head" and slot_ids is not None and "bank_head" in params:
+        w = params["bank_head"]["w"][slot_ids]
+        logits = jnp.einsum("bsd,bdv->bsv", x, w, preferred_element_type=jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad, jnp.finfo(jnp.float32).min, logits)
+        return logits
+    return nn.logits_apply(params["embed"], params.get("head", {}), x, cfg)
+
+
+def encdec_apply(params, batch, cfg: ModelConfig, *, return_cache=False):
+    """Training / prefill forward.
+
+    batch: frames (B, S_enc, d), tokens (B, S_dec) [+ slot_ids].
+    Returns (decoder logits, aux=0) [+ cache {self, cross}].
+    """
+    slot_ids = batch.get("slot_ids")
+    memory = encode(params, batch["frames"], cfg)
+    x = nn.embed_apply(params["embed"], batch["tokens"])
+    bsz, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (bsz, s))
+
+    def body(x, lp):
+        h, kv = nn.attention_apply(
+            lp["self_attn"], nn.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+            positions=positions,
+        )
+        x = x + h
+        ckv = cross_kv(lp["cross_attn"], memory, cfg)
+        x = x + _cross_attention_apply(
+            lp["cross_attn"], nn.rmsnorm(lp["ln2"], x, cfg.norm_eps), ckv, cfg
+        )
+        x = x + nn.mlp_apply(lp["mlp"], nn.rmsnorm(lp["ln3"], x, cfg.norm_eps))
+        return x, (kv, ckv)
+
+    x, (kvs, ckvs) = lax.scan(
+        lambda c, lp: _maybe_remat(body, cfg)(c, lp), x, params["dec_layers"]
+    )
+    logits = _final_logits(params, x, cfg, slot_ids)
+    if return_cache:
+        return logits, jnp.zeros((), jnp.float32), {"self": kvs, "cross": ckvs}
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
+    """Decoder cache: self-attn cache of seq_len + cross K/V of cross_len."""
+    dt = dtype or nn.cdtype(cfg)
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self": {
+            "k": jnp.zeros((cfg.n_dec_layers, batch, g, seq_len, hd), dt),
+            "v": jnp.zeros((cfg.n_dec_layers, batch, g, seq_len, hd), dt),
+        },
+        "cross": {
+            "k": jnp.zeros((cfg.n_dec_layers, batch, g, cfg.cross_len, hd), dt),
+            "v": jnp.zeros((cfg.n_dec_layers, batch, g, cfg.cross_len, hd), dt),
+        },
+    }
+
+
+def encdec_decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
+                       slot_ids=None):
+    """One decoder step against resident self/cross caches."""
+    x = nn.embed_apply(params["embed"], tokens)
+    bsz = x.shape[0]
+    positions = jnp.broadcast_to(
+        jnp.atleast_1d(cache_len)[..., None], (bsz, 1)
+    ).astype(jnp.int32)
+
+    def body(x, inp):
+        lp, kv, ckv = inp
+        h, new_kv = nn.attention_apply(
+            lp["self_attn"], nn.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+            positions=positions, kv_cache=kv, cache_len=cache_len,
+        )
+        x = x + h
+        x = x + _cross_attention_apply(
+            lp["cross_attn"], nn.rmsnorm(lp["ln2"], x, cfg.norm_eps), ckv, cfg
+        )
+        x = x + nn.mlp_apply(lp["mlp"], nn.rmsnorm(lp["ln3"], x, cfg.norm_eps))
+        return x, new_kv
+
+    x, new_self = lax.scan(
+        body, x, (params["dec_layers"], cache["self"], cache["cross"])
+    )
+    logits = _final_logits(params, x, cfg, slot_ids)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,426 @@
+"""Decoder-LM family: dense (llama-style), MoE, SSM (mamba2), hybrid (zamba2),
+with optional VLM patch-embedding frontend stub and the model-bank technique
+(adapter / head / full residency) integrated as a first-class feature.
+
+One functional namespace serves all families; ``cfg.family`` selects the layer
+stack.  Layer stacks are homogeneous and scanned (``lax.scan`` over stacked
+params) so HLO size is O(1) in depth — required for 40-cell dry-run compiles.
+
+Hybrid structure (zamba2): ``n_groups = L // attn_every`` groups, each =
+``attn_every`` mamba layers followed by ONE application of a *shared*
+attention block (single weight set referenced from every group — itself a
+resident shared executor in the BoundSwitch sense), plus trailing mamba
+layers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.nn import modules as nn
+from repro.nn import moe as moe_lib
+from repro.nn import ssd as ssd_lib
+
+
+# ---------------------------------------------------------------------------
+# adapters (the banked technique at LM scale)
+# ---------------------------------------------------------------------------
+
+def adapter_init(key, cfg: ModelConfig, out_dim: int) -> dict:
+    """Banked low-rank delta: K resident (d->r->out) adapters."""
+    ka, kb = jax.random.split(key)
+    k, r, d = cfg.bank_slots, cfg.adapter_rank, cfg.d_model
+    dt = nn.cdtype(cfg)
+    return {
+        "a": nn._dense_init(ka, (k, d, r), dt),
+        "b": jnp.zeros((k, r, out_dim), dt),  # zero-init: no-op at start
+    }
+
+
+def adapter_apply(params, x, slot_ids):
+    """x: (B, S, d); slot_ids: (B,) -> (B, S, out).  Per-request gather is
+    cheap because adapters are low-rank (the 'take' strategy)."""
+    a = params["a"][slot_ids]  # (B, d, r)
+    b = params["b"][slot_ids]  # (B, r, out)
+    return jnp.einsum("bsd,bdr,bro->bso", x, a, b)
+
+
+# ---------------------------------------------------------------------------
+# layer definitions
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "attn": nn.attention_init(k1, cfg),
+        "ln2": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "mlp": nn.mlp_init(k2, cfg),
+    }
+    if cfg.bank_mode == "adapter":
+        p["adapter"] = adapter_init(k3, cfg, cfg.d_model)
+    return p
+
+
+def _moe_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "attn": nn.attention_init(k1, cfg),
+        "ln2": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "moe": moe_lib.moe_init(k2, cfg),
+    }
+    if cfg.moe_dense_residual:
+        p["dense_mlp"] = nn.mlp_init(k3, cfg)
+    if cfg.bank_mode == "adapter":
+        p["adapter"] = adapter_init(k4, cfg, cfg.d_model)
+    return p
+
+
+def _ssm_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg)),
+        "mamba": ssd_lib.mamba_init(k1, cfg),
+    }
+    if cfg.bank_mode == "adapter":
+        p["adapter"] = adapter_init(k2, cfg, cfg.d_model)
+    return p
+
+
+def _dense_layer_apply(lp, x, cfg, *, positions, kv_cache=None, cache_len=None,
+                       slot_ids=None, moe_capacity=None, pad_mask=None):
+    h, new_kv = nn.attention_apply(
+        lp["attn"], nn.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, kv_cache=kv_cache, cache_len=cache_len,
+    )
+    x = x + h
+    xn = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe" and "moe" in lp:
+        m, aux = moe_lib.moe_apply(lp["moe"], xn, cfg, capacity=moe_capacity,
+                                   token_mask=pad_mask)
+        if cfg.moe_dense_residual:
+            m = m + nn.mlp_apply(lp["dense_mlp"], xn)
+    else:
+        m = nn.mlp_apply(lp["mlp"], xn)
+    if "adapter" in lp and slot_ids is not None:
+        m = m + adapter_apply(lp["adapter"], xn, slot_ids)
+    out = x + m
+    if cfg.seq_shard_activations and out.ndim == 3 and out.shape[1] % 16 == 0:
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.PartitionSpec(None, "model", None))
+    return out, new_kv, aux
+
+
+def _ssm_layer_apply(lp, x, cfg, *, ssm_state=None, conv_state=None,
+                     slot_ids=None, pad_mask=None, last_valid=None):
+    xn = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    h, new_ssm, new_conv = ssd_lib.mamba_apply(
+        lp["mamba"], xn, cfg, ssm_state=ssm_state, conv_state=conv_state,
+        pad_mask=pad_mask, last_valid=last_valid,
+    )
+    if "adapter" in lp and slot_ids is not None:
+        h = h + adapter_apply(lp["adapter"], xn, slot_ids)
+    return x + h, new_ssm, new_conv
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def _stack_init(layer_init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(layer_init_fn)(keys)
+
+
+def lm_init(key, cfg: ModelConfig) -> dict:
+    ke, kl, kh, ks, kf, kb = jax.random.split(key, 6)
+    params: dict = {"embed": nn.embed_init(ke, cfg)}
+    if cfg.family in ("dense", "moe"):
+        init_fn = (
+            functools.partial(_moe_layer_init, cfg=cfg)
+            if cfg.family == "moe"
+            else functools.partial(_dense_layer_init, cfg=cfg)
+        )
+        params["layers"] = _stack_init(lambda k: init_fn(k), kl, cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["layers"] = _stack_init(
+            lambda k: _ssm_layer_init(k, cfg), kl, cfg.n_layers
+        )
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        trailing = cfg.n_layers - n_groups * cfg.attn_every
+        kg, kt = jax.random.split(kl)
+        group_keys = jax.random.split(kg, n_groups)
+        params["groups"] = jax.vmap(
+            lambda k: _stack_init(lambda kk: _ssm_layer_init(kk, cfg), k, cfg.attn_every)
+        )(group_keys)
+        if trailing:
+            params["trailing"] = _stack_init(
+                lambda k: _ssm_layer_init(k, cfg), kt, trailing
+            )
+        params["shared_attn"] = _dense_layer_init(ks, cfg)  # ONE shared block
+    else:
+        raise ValueError(f"lm_init does not handle family {cfg.family!r}")
+
+    params["final_norm"] = nn.rmsnorm_init(cfg.d_model, nn.cdtype(cfg))
+    params["head"] = nn.head_init(kh, cfg)
+    if cfg.frontend == "patch":
+        params["frontend_proj"] = {
+            "w": nn._dense_init(kf, (cfg.d_model, cfg.d_model), nn.cdtype(cfg))
+        }
+    if cfg.bank_mode == "head":
+        params["bank_head"] = {
+            "w": nn._dense_init(kb, (cfg.bank_slots, cfg.d_model, cfg.padded_vocab),
+                                nn.cdtype(cfg))
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
+    """Decode cache pytree for a context of ``seq_len`` tokens."""
+    quant = cfg.cache_dtype == "int8" and dtype is None
+    dt = dtype or (jnp.int8 if quant else nn.cdtype(cfg))
+    lc = cfg.kv_cache_len(seq_len)
+    g, hd = cfg.n_kv_heads, cfg.head_dim or 0
+
+    def kv(n_layers):
+        c = {
+            "k": jnp.zeros((n_layers, batch, g, lc, hd), dt),
+            "v": jnp.zeros((n_layers, batch, g, lc, hd), dt),
+        }
+        if quant:
+            c["k_scale"] = jnp.zeros((n_layers, batch, g, lc), jnp.float32)
+            c["v_scale"] = jnp.zeros((n_layers, batch, g, lc), jnp.float32)
+        return c
+
+    def mamba_states(n, extra=()):
+        di, h, nst, conv_dim = ssd_lib.ssm_dims(cfg)
+        return {
+            "ssm": jnp.zeros((*extra, n, batch, h, cfg.ssm_head_dim, nst), jnp.float32),
+            "conv": jnp.zeros((*extra, n, batch, cfg.ssm_conv_width - 1, conv_dim), dt),
+        }
+
+    if cfg.family in ("dense", "moe"):
+        return kv(cfg.n_layers)
+    if cfg.family == "ssm":
+        return mamba_states(cfg.n_layers)
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        trailing = cfg.n_layers - n_groups * cfg.attn_every
+        cache = {
+            "groups": mamba_states(cfg.attn_every, extra=(n_groups,)),
+            "attn": kv(n_groups),
+        }
+        if trailing:
+            cache["trailing"] = mamba_states(trailing)
+        return cache
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    x = nn.embed_apply(params["embed"], batch["tokens"])
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype) @ params["frontend_proj"]["w"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def _final_logits(params, x, cfg, slot_ids=None):
+    x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.bank_mode == "head" and slot_ids is not None and "bank_head" in params:
+        w = params["bank_head"]["w"][slot_ids]  # (B, d, V) banked head
+        logits = jnp.einsum("bsd,bdv->bsv", x, w, preferred_element_type=jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad, jnp.finfo(jnp.float32).min, logits)
+        return logits
+    return nn.logits_apply(params["embed"], params.get("head", {}), x, cfg)
+
+
+def lm_apply(params, batch, cfg: ModelConfig, *, return_cache: bool = False):
+    """Full-sequence forward (train / prefill).
+
+    batch: tokens (B, S) [+ patch_embeds (B, F, d)] [+ slot_ids (B,)].
+    Returns (logits (B, S_total, V), aux_loss) and optionally the kv cache
+    pytree holding the full-sequence keys/values (prefill).
+    """
+    slot_ids = batch.get("slot_ids")
+    pad_mask = batch.get("pad_mask")  # (B, S): 1=real token, 0=right pad
+    last_valid = (
+        pad_mask.sum(axis=1).astype(jnp.int32) if pad_mask is not None else None
+    )
+    x = _embed_inputs(params, batch, cfg)
+    bsz, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (bsz, s))
+    moe_capacity = None
+    if cfg.family == "moe":
+        moe_capacity = int(
+            cfg.moe_capacity_factor * bsz * s * cfg.experts_per_token / cfg.n_experts
+        )
+        moe_capacity = max(8, -(-moe_capacity // 8) * 8)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = None
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, lp):
+            y, kv, aux = _dense_layer_apply(
+                lp, x, cfg, positions=positions, slot_ids=slot_ids,
+                moe_capacity=moe_capacity, pad_mask=pad_mask,
+            )
+            return y, (kv, aux)
+
+        x, (kvs, auxs) = lax.scan(
+            lambda c, lp: _maybe_remat(body, cfg)(c, lp), x, params["layers"]
+        )
+        aux_total = auxs.sum()
+        caches = kvs
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            y, ssm, conv = _ssm_layer_apply(
+                lp, x, cfg, slot_ids=slot_ids,
+                pad_mask=pad_mask, last_valid=last_valid,
+            )
+            return y, {"ssm": ssm, "conv": conv}
+
+        x, states = lax.scan(
+            lambda c, lp: _maybe_remat(body, cfg)(c, lp), x, params["layers"]
+        )
+        caches = states
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, glp):
+            def inner(x, lp):
+                y, ssm, conv = _ssm_layer_apply(
+                    lp, x, cfg, slot_ids=slot_ids,
+                    pad_mask=pad_mask, last_valid=last_valid,
+                )
+                return y, {"ssm": ssm, "conv": conv}
+
+            x, states = lax.scan(_maybe_remat(inner, cfg), x, glp)
+            y, kv, _ = _dense_layer_apply(
+                shared, x, cfg, positions=positions, slot_ids=slot_ids
+            )
+            return y, (states, kv)
+
+        x, (gstates, kvs) = lax.scan(
+            lambda c, g: _maybe_remat(group_body, cfg)(c, g), x, params["groups"]
+        )
+        caches = {"groups": gstates, "attn": kvs}
+        if "trailing" in params:
+            def inner(x, lp):
+                y, ssm, conv = _ssm_layer_apply(
+                    lp, x, cfg, slot_ids=slot_ids,
+                    pad_mask=pad_mask, last_valid=last_valid,
+                )
+                return y, {"ssm": ssm, "conv": conv}
+
+            x, tstates = lax.scan(_maybe_remat(inner, cfg), x, params["trailing"])
+            caches["trailing"] = tstates
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _final_logits(params, x, cfg, slot_ids)
+    if return_cache:
+        return logits, aux_total, caches
+    return logits, aux_total
+
+
+def lm_decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
+                   slot_ids=None):
+    """One decode step.  tokens: (B, 1); cache from ``init_cache``;
+    cache_len: scalar int32 — number of valid context tokens (synchronous
+    stepping).  Returns (logits (B, 1, V), new_cache)."""
+    x = nn.embed_apply(params["embed"], tokens)
+    bsz = x.shape[0]
+    positions = jnp.broadcast_to(
+        jnp.atleast_1d(cache_len)[..., None], (bsz, 1)
+    ).astype(jnp.int32)
+    moe_capacity = None
+    if cfg.family == "moe":
+        # decode must never drop: worst case all rows route to one expert
+        moe_capacity = max(8, -(-bsz // 8) * 8)
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, inp):
+            lp, kv = inp
+            y, new_kv, _ = _dense_layer_apply(
+                lp, x, cfg, positions=positions, kv_cache=kv,
+                cache_len=cache_len, slot_ids=slot_ids,
+                moe_capacity=moe_capacity,
+            )
+            return y, new_kv
+
+        x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, st = inp
+            y, ssm, conv = _ssm_layer_apply(
+                lp, x, cfg, ssm_state=st["ssm"], conv_state=st["conv"],
+                slot_ids=slot_ids,
+            )
+            return y, {"ssm": ssm, "conv": conv}
+
+        x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, inp):
+            glp, gst, kv = inp
+
+            def inner(x, i2):
+                lp, st = i2
+                y, ssm, conv = _ssm_layer_apply(
+                    lp, x, cfg, ssm_state=st["ssm"], conv_state=st["conv"],
+                    slot_ids=slot_ids,
+                )
+                return y, {"ssm": ssm, "conv": conv}
+
+            x, new_gst = lax.scan(inner, x, (glp, gst))
+            y, new_kv, _ = _dense_layer_apply(
+                shared, x, cfg, positions=positions, kv_cache=kv,
+                cache_len=cache_len, slot_ids=slot_ids,
+            )
+            return y, (new_gst, new_kv)
+
+        x, (new_gstates, new_kvs) = lax.scan(
+            group_body, x, (params["groups"], cache["groups"], cache["attn"])
+        )
+        new_cache = {"groups": new_gstates, "attn": new_kvs}
+        if "trailing" in params:
+            def inner(x, i2):
+                lp, st = i2
+                y, ssm, conv = _ssm_layer_apply(
+                    lp, x, cfg, ssm_state=st["ssm"], conv_state=st["conv"],
+                    slot_ids=slot_ids,
+                )
+                return y, {"ssm": ssm, "conv": conv}
+
+            x, new_t = lax.scan(inner, x, (params["trailing"], cache["trailing"]))
+            new_cache["trailing"] = new_t
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _final_logits(params, x, cfg, slot_ids)
+    return logits, new_cache

@@ -1,0 +1,361 @@
+"""Functional NN building blocks (no flax — params are plain pytrees).
+
+Conventions
+-----------
+* every module is an ``init(key, cfg, ...) -> params`` / ``apply(params, x, ...)``
+  pair; params are nested dicts with stable key names that the sharding rules
+  in ``repro.distributed.sharding`` match by path,
+* weights live in ``cfg.dtype`` (bf16), all reductions / softmax / norms
+  accumulate in fp32,
+* attention is a pure-JAX flash formulation (q-block scan with online
+  softmax over kv-block scan) so 32k-sequence compiles stay memory-bounded;
+  the quadratic-score reference lives in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional sliding window) — flash formulation
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cdtype(cfg)
+    return {
+        "wq": _dense_init(kq, (d, cfg.n_heads * hd), dt),
+        "wk": _dense_init(kk, (d, cfg.n_kv_heads * hd), dt),
+        "wv": _dense_init(kv, (d, cfg.n_kv_heads * hd), dt),
+        "wo": _dense_init(ko, (cfg.n_heads * hd, d), dt, scale=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def _flash_body(q, k, v, *, causal: bool, window: Optional[int],
+                q_offset, k_offset, q_block: int, k_block: int,
+                remat: bool = False, seq_shard_axis: Optional[str] = None):
+    """Online-softmax attention.
+
+    q: (B, G, gq, Sq, D); k, v: (B, G, Skv, D).  Offsets give absolute
+    positions (decode / cache reads use q_offset = cache_len).
+    Returns (B, G, gq, Sq, D) in q.dtype.
+
+    ``remat``: recompute the inner kv scan in the backward pass instead of
+    saving per-iteration softmax residuals (flash-style backward).
+    ``seq_shard_axis``: shard the q-token dim of each block over this mesh
+    axis — recovers TP parallelism for archs whose head count does not
+    divide the TP degree (the heads would otherwise replicate).
+    """
+    bsz, g, gq, sq, d = q.shape
+    skv = k.shape[2]
+    scale = d ** -0.5
+    nqb = sq // q_block
+    nkb = skv // k_block
+    neg = jnp.finfo(jnp.float32).min
+
+    if seq_shard_axis is not None:
+        # one reshard per layer: the whole q tensor (and its output) shard
+        # their token dim over the TP axis; the q-block scan is collapsed so
+        # the backward pass re-runs ONE sharded pass, not nqb reshards.
+        q = lax.with_sharding_constraint(
+            q, jax.sharding.PartitionSpec(None, None, None, seq_shard_axis, None))
+        q_block = sq
+        nqb = 1
+
+    def q_step(_, iq):
+        qs = lax.dynamic_slice_in_dim(q, iq * q_block, q_block, 3)
+        qpos = q_offset + iq * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            ks = lax.dynamic_slice_in_dim(k, jk * k_block, k_block, 2)
+            vs = lax.dynamic_slice_in_dim(v, jk * k_block, k_block, 2)
+            kpos = k_offset + jk * k_block + jnp.arange(k_block)
+            s = jnp.einsum(
+                "bghqd,bgkd->bghqk", qs, ks,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = jnp.ones((q_block, k_block), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, neg)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bghqk,bgkd->bghqd", p.astype(vs.dtype), vs,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((bsz, g, gq, q_block), neg, jnp.float32),
+            jnp.zeros((bsz, g, gq, q_block), jnp.float32),
+            jnp.zeros((bsz, g, gq, q_block, d), jnp.float32),
+        )
+        (m, l, acc), _ = lax.scan(kv_step, init, jnp.arange(nkb))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return None, out.astype(q.dtype)
+
+    step = jax.checkpoint(q_step) if remat else q_step
+    _, blocks = lax.scan(step, None, jnp.arange(nqb))  # (nqb, B, G, gq, qb, D)
+    out = jnp.moveaxis(blocks, 0, 3).reshape(bsz, g, gq, sq, d)
+    return out
+
+
+def _quantize_rows(x, axis=-1):
+    """Symmetric int8 quantization with per-row scale over ``axis``."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=axis) / 127.0
+    q = jnp.clip(
+        jnp.round(xf / jnp.maximum(scale, 1e-8)[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def _decode_attention_int8(q, k, v, kv_cache, slot, valid, upd, hd):
+    """Single-token attention over an int8-quantized KV cache.
+
+    Cache: k/v int8 (B, G, L, D) + k_scale/v_scale f32 (B, G, L) (per token
+    per kv-head).  Both contractions run as native int8 dots (int32
+    accumulation) — the cache is never materialized in a wider dtype, so
+    HBM traffic halves.  The per-position v scale cannot be factored out of
+    the PV sum, so it is folded into the probabilities before requantizing.
+    """
+    kq_new, ks_new = _quantize_rows(k)           # (B,G,1,D)i8, (B,G,1)f32
+    vq_new, vs_new = _quantize_rows(v)
+    upd_s = jax.vmap(
+        lambda c, s_, i: jax.lax.dynamic_update_slice_in_dim(c, s_, i, axis=1)
+    )
+    ck = upd(kv_cache["k"], kq_new, slot)
+    cv = upd(kv_cache["v"], vq_new, slot)
+    cks = upd_s(kv_cache["k_scale"], ks_new, slot)
+    cvs = upd_s(kv_cache["v_scale"], vs_new, slot)
+
+    qq, qs = _quantize_rows(q)                   # (B,G,gq,1,D)i8, (B,G,gq,1)
+    scores_i = jnp.einsum(
+        "bghqd,bgkd->bghqk", qq, ck, preferred_element_type=jnp.int32
+    )
+    scores = scores_i.astype(jnp.float32) * qs[..., None] \
+        * cks[:, :, None, None, :] * (hd ** -0.5)
+    scores = jnp.where(valid[:, None, None, None], scores,
+                       jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    w = p * cvs[:, :, None, None, :]             # fold per-token v scale in
+    wq, ws = _quantize_rows(w)
+    out_i = jnp.einsum(
+        "bghqk,bgkd->bghqd", wq, cv, preferred_element_type=jnp.int32
+    )
+    out = out_i.astype(jnp.float32) * ws[..., None]
+    return out, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+
+
+def _pick_block(s: int, target: int) -> int:
+    b = min(target, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+def attention_apply(
+    params,
+    x,
+    cfg: ModelConfig,
+    *,
+    positions,
+    kv_cache: Optional[dict] = None,
+    cache_len=None,
+    causal: bool = True,
+    q_block: int = 512,
+    k_block: int = 1024,
+):
+    """Self-attention over x: (B, S, d).
+
+    Training / prefill: ``kv_cache is None`` -> flash over the sequence;
+    returns (out, new_kv) where new_kv holds the full k/v (prefill cache).
+    Decode: ``kv_cache = {"k","v"}`` (B, G, L, D) with ``cache_len`` tokens
+    valid -> writes the new token at ``cache_len`` and attends over the cache.
+    """
+    bsz, s, d = x.shape
+    hq, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    gq = hq // g
+    q = (x @ params["wq"]).reshape(bsz, s, hq, hd)
+    k = (x @ params["wk"]).reshape(bsz, s, g, hd)
+    v = (x @ params["wv"]).reshape(bsz, s, g, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # (B, G, gq, S, D) / (B, G, S, D)
+    q = q.reshape(bsz, s, g, gq, hd).transpose(0, 2, 3, 1, 4)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if kv_cache is None:
+        qb = _pick_block(s, q_block)
+        kb = _pick_block(s, k_block)
+        out = _flash_body(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            q_offset=0, k_offset=0, q_block=qb, k_block=kb,
+            remat=cfg.flash_remat,
+            seq_shard_axis="model" if cfg.seq_shard_attention else None,
+        )
+        new_cache = {"k": k, "v": v}
+    else:
+        # decode: s == 1; write-then-attend against the cache.  ``cache_len``
+        # may be a scalar (synchronous dry-run stepping) or a (B,) vector
+        # (serving engine: every row at its own offset).
+        lcache = kv_cache["k"].shape[2]
+        cl = jnp.broadcast_to(jnp.atleast_1d(cache_len), (bsz,)).astype(jnp.int32)
+        if cfg.sliding_window is not None:
+            slot = cl % lcache
+        else:
+            slot = cl
+        upd = jax.vmap(
+            lambda c, kk, i: lax.dynamic_update_slice_in_dim(c, kk, i, axis=1)
+        )
+        kpos = jnp.arange(lcache)
+        if cfg.sliding_window is None:
+            valid = kpos[None, :] <= cl[:, None]
+        else:  # ring buffer: everything resident is in-window
+            valid = kpos[None, :] < jnp.minimum(cl + 1, lcache)[:, None]
+
+        if "k_scale" in kv_cache:
+            out, new_cache = _decode_attention_int8(
+                q, k, v, kv_cache, slot, valid, upd, hd)
+        else:
+            ck = upd(kv_cache["k"], k, slot)
+            cv = upd(kv_cache["v"], v, slot)
+            scores = jnp.einsum(
+                "bghqd,bgkd->bghqk", q, ck, preferred_element_type=jnp.float32
+            ) * (hd ** -0.5)
+            scores = jnp.where(valid[:, None, None, None], scores,
+                               jnp.finfo(jnp.float32).min)
+            p = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum(
+                "bghqk,bgkd->bghqd", p.astype(cv.dtype), cv,
+                preferred_element_type=jnp.float32,
+            )
+            new_cache = {"k": ck, "v": cv}
+        out = out.astype(x.dtype)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(bsz, s, hq * hd)
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    dt = cdtype(cfg)
+    return {
+        "wg": _dense_init(kg, (d, f), dt),
+        "wu": _dense_init(ku, (d, f), dt),
+        "wd": _dense_init(kd, (f, d), dt, scale=f ** -0.5),
+    }
+
+
+def mlp_apply(params, x):
+    h = jax.nn.silu((x @ params["wg"]).astype(jnp.float32)).astype(x.dtype)
+    return (h * (x @ params["wu"])) @ params["wd"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig) -> dict:
+    v, d = cfg.padded_vocab, cfg.d_model
+    p = {"embedding": _dense_init(key, (v, d), cdtype(cfg), scale=1.0)}
+    # zero the padded rows so they never contribute
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = (jnp.arange(v) < cfg.vocab_size)[:, None]
+        p["embedding"] = p["embedding"] * mask.astype(p["embedding"].dtype)
+    return p
+
+
+def embed_apply(params, tokens):
+    return params["embedding"][tokens]
+
+
+def logits_apply(embed_params, head_params, x, cfg: ModelConfig):
+    """Project to (padded) vocab; padded rows masked to -inf."""
+    if cfg.tie_embeddings:
+        w = embed_params["embedding"]
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, w, preferred_element_type=jnp.float32
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, head_params["w"], preferred_element_type=jnp.float32
+        )
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.finfo(jnp.float32).min, logits)
+    return logits
+
+
+def head_init(key, cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": _dense_init(key, (cfg.d_model, cfg.padded_vocab), cdtype(cfg))}

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Structurally this is BoundSwitch's grouped slot selection at *token*
+granularity (DESIGN.md §5): the router computes the slot (expert) ids, tokens
+are grouped so each expert processes a contiguous capacity block, and the
+expert weights — a resident bank stacked (E, ...) — are indexed, never moved.
+The dispatch math mirrors ``repro.core.bank.group_by_slot_padded`` with a
+fixed per-slot capacity instead of block-multiple padding (overflow drops,
+as standard for capacity-factor MoE).
+
+Sharding: expert tensors carry a leading E axis sharded over the ``model``
+mesh axis; dispatch/combine scatter-gathers become all-to-alls under GSPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.modules import _dense_init, cdtype
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    dt = cdtype(cfg)
+    return {
+        "router": _dense_init(kr, (d, e), jnp.float32),
+        "wg": _dense_init(kg, (e, d, f), dt),
+        "wu": _dense_init(ku, (e, d, f), dt),
+        "wd": _dense_init(kd, (e, f, d), dt, scale=f ** -0.5),
+    }
+
+
+@dataclasses.dataclass
+class Dispatch:
+    dest: jnp.ndarray     # (T*k,) destination row in the (E*C) buffer
+    token: jnp.ndarray    # (T*k,) source token index
+    weight: jnp.ndarray   # (T*k,) combine weight (0 for dropped)
+    capacity: int
+
+
+def dispatch_by_expert(expert_ids, gate_weights, n_experts: int, capacity: int) -> Dispatch:
+    """Group (token, expert) assignments into per-expert capacity blocks.
+
+    expert_ids / gate_weights: (T, k).  Overflow beyond ``capacity`` per
+    expert is dropped (weight zeroed), underflow rows stay zero — every
+    expert sees exactly ``capacity`` rows, so expert matmuls are dense and
+    identically shaped (the shared-executor property).
+
+    Assignments with ``expert_id == n_experts`` (masked pad tokens) sort
+    after every real assignment and never consume capacity.
+    """
+    t, k = expert_ids.shape
+    flat_e = expert_ids.reshape(-1)
+    flat_w = gate_weights.reshape(-1)
+    flat_t = jnp.arange(t * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts + 1)
+    seg_start = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = (rank < capacity) & (sorted_e < n_experts)
+    dest = jnp.where(keep, sorted_e * capacity + rank, n_experts * capacity)  # OOB drops
+    return Dispatch(
+        dest=dest.astype(jnp.int32),
+        token=flat_t[order],
+        weight=jnp.where(keep, flat_w[order], 0.0),
+        capacity=capacity,
+    )
+
+
+def moe_apply(params, x, cfg: ModelConfig, *, capacity: int | None = None,
+              token_mask=None):
+    """x: (B, S, d) -> (B, S, d); also returns the router aux loss.
+
+    ``token_mask`` (B, S): masked (pad) tokens are excluded from dispatch —
+    they never consume expert capacity and contribute zero output.
+    """
+    bsz, s, d = x.shape
+    t = bsz * s
+    e, k = cfg.n_experts, cfg.experts_per_token
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_ids = jax.lax.top_k(probs, k)                  # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    if token_mask is not None:
+        tm = token_mask.reshape(t) > 0
+        expert_ids = jnp.where(tm[:, None], expert_ids, e)  # pads -> drop id
+        gate_w = jnp.where(tm[:, None], gate_w, 0.0)
+
+    if capacity is None:
+        capacity = int(cfg.moe_capacity_factor * t * k / e)
+        capacity = max(8, -(-capacity // 8) * 8)                  # mult of 8
+    disp = dispatch_by_expert(expert_ids, gate_w, e, capacity)
+
+    # scatter tokens into per-expert capacity blocks (rows beyond E*C drop)
+    buf = jnp.zeros((e * capacity, d), x.dtype)
+    buf = buf.at[disp.dest].set(xt[disp.token], mode="drop")
+    he = buf.reshape(e, capacity, d)
+
+    g = jnp.einsum("ecd,edf->ecf", he, params["wg"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", he, params["wu"], preferred_element_type=jnp.float32)
+    hidden = (jax.nn.silu(g) * u).astype(x.dtype)
+    out_e = jnp.einsum("ecf,efd->ecd", hidden, params["wd"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+    gathered = out_e.reshape(e * capacity, d)[jnp.clip(disp.dest, 0, e * capacity - 1)]
+    contrib = gathered * disp.weight[:, None].astype(x.dtype)
+    yt = jnp.zeros((t, d), x.dtype).at[disp.token].add(contrib)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                       # (E,)
+    ce = jnp.zeros(e).at[expert_ids.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    return yt.reshape(bsz, s, d), aux

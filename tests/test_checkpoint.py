@@ -1,0 +1,104 @@
+"""Checkpoint store: roundtrip, atomic commit, GC, elastic restore across
+device counts (subprocess)."""
+
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store
+
+
+def _tree(rng):
+    return {
+        "a": {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)},
+        "b": jnp.asarray(rng.normal(size=(3,)), jnp.bfloat16),
+        "c": jnp.asarray(rng.integers(0, 10, (2, 2)), jnp.int32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_exact(rng):
+    t = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 3, t, extra={"data_cursor": 11})
+        like = jax.tree_util.tree_map(jnp.zeros_like, t)
+        back, extra = store.restore(d, None, like)
+        assert extra["data_cursor"] == 11
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_last_gc(rng):
+    t = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(5):
+            store.save(d, s, t, keep_last=2)
+        assert store.list_steps(d) == [3, 4]
+        assert store.latest_step(d) == 4
+
+
+def test_no_tmp_left_behind(rng):
+    t = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 1, t)
+        assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_shape_mismatch_raises(rng):
+    t = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 1, t)
+        bad = dict(t, b=jnp.zeros((5,), jnp.bfloat16))
+        with pytest.raises(ValueError, match="shape mismatch"):
+            store.restore(d, 1, bad)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    t = {"x": jnp.asarray(rng.normal(size=(rng.integers(1, 5),)), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 0, t)
+        back, _ = store.restore(d, 0, t)
+        np.testing.assert_array_equal(np.asarray(t["x"]), np.asarray(back["x"]))
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_device_counts(rng):
+    """Save on 1 device; restore + reshard on 8 fake devices in a subprocess
+    (the elastic-scaling path)."""
+    t = {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 5, t, extra={"mesh": "1dev"})
+        script = textwrap.dedent(f"""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, {repr(os.path.join(os.path.dirname(__file__), '..', 'src'))})
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.checkpoint import store
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            like = {{"w": jnp.zeros((16, 8), jnp.float32)}}
+            sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
+            tree, extra = store.restore({repr(d)}, 5, like, shardings=sh)
+            assert extra["mesh"] == "1dev"
+            assert len(tree["w"].sharding.device_set) == 8
+            print("ELASTIC_OK", float(tree["w"].sum()))
+        """)
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=300)
+        assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+        want = float(jnp.sum(t["w"]))
+        got = float(out.stdout.split("ELASTIC_OK")[1].strip())
+        assert abs(got - want) < 1e-4

@@ -1,0 +1,43 @@
+"""Quantized (int8) KV cache: decode numerics within tolerance of the
+full-precision path (beyond-paper optimization, EXPERIMENTS.md §Perf C2)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import api
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "smollm-360m"])
+def test_int8_cache_decode_close(arch, rng):
+    cfg = get_config(arch).reduced(bank_mode="none", remat="none",
+                                   dtype="float32")
+    cfg8 = dataclasses.replace(cfg, cache_dtype="int8")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = rng.integers(0, cfg.vocab_size, 10)
+    c_bf = api.init_cache(cfg, 2, 32)
+    c_i8 = api.init_cache(cfg8, 2, 32)
+    assert c_i8["k"].dtype == jnp.int8 and "k_scale" in c_i8
+    for i, t in enumerate(toks):
+        tt = jnp.asarray([[int(t)], [int(t)]])
+        lg1, c_bf = api.decode_step(params, tt, c_bf, jnp.int32(i), cfg)
+        lg2, c_i8 = api.decode_step(params, tt, c_i8, jnp.int32(i), cfg8)
+        rel = float(jnp.abs(lg1 - lg2).max() / (jnp.abs(lg1).max() + 1e-9))
+        assert rel < 0.05, f"step {i}: rel err {rel}"
+
+
+def test_int8_cache_halves_bytes():
+    cfg = get_config("glm4-9b").reduced()
+    cfg8 = dataclasses.replace(cfg, cache_dtype="int8")
+    c = api.init_cache(cfg, 4, 64)
+    c8 = api.init_cache(cfg8, 4, 64)
+    kv = c["k"].nbytes + c["v"].nbytes
+    kv8 = c8["k"].nbytes + c8["v"].nbytes
+    scales = c8["k_scale"].nbytes + c8["v_scale"].nbytes
+    assert kv8 == kv // 2
+    # one f32 scale per head_dim int8 values: overhead = 4/head_dim
+    assert scales <= kv8 * 4 / cfg8.head_dim

@@ -1,0 +1,182 @@
+"""NN substrate: flash attention vs quadratic oracle, SSD vs sequential,
+MoE dispatch invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.nn import modules, moe as moe_lib, ssd
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _ref_attn(p, x, cfg, pos, causal=True):
+    b, s, _ = x.shape
+    hq, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, g, hd)
+    v = (x @ p["wv"]).reshape(b, s, g, hd)
+    q = modules.rope(q, pos, cfg.rope_theta)
+    k = modules.rope(k, pos, cfg.rope_theta)
+    q = q.reshape(b, s, g, hq // g, hd)
+    sc = jnp.einsum("bqghd,bkgd->bghqk", q, k,
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    i = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if cfg.sliding_window:
+        mask &= (i[:, None] - i[None, :]) < cfg.sliding_window
+    sc = jnp.where(mask[None, None, None], sc, jnp.finfo(jnp.float32).min)
+    pr = jax.nn.softmax(sc, -1)
+    o = jnp.einsum("bghqk,bkgd->bghqd", pr.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, hq * hd) @ p["wo"]
+
+
+@pytest.mark.parametrize("window,qb,kb,heads,kv", [
+    (None, 16, 16, 4, 2), (None, 8, 32, 4, 4), (16, 16, 16, 4, 1),
+    (None, 64, 64, 6, 3), (8, 4, 8, 2, 2),
+])
+def test_flash_vs_quadratic(rng, window, qb, kb, heads, kv):
+    cfg = _cfg(n_heads=heads, n_kv_heads=kv, head_dim=16,
+               d_model=heads * 16, sliding_window=window)
+    p = modules.attention_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 64, cfg.d_model)), jnp.float32)
+    pos = jnp.arange(64)[None]
+    out, _ = modules.attention_apply(p, x, cfg, positions=pos,
+                                     q_block=qb, k_block=kb)
+    want = _ref_attn(p, x, cfg, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_matches_prefill(rng):
+    cfg = _cfg()
+    p = modules.attention_init(jax.random.PRNGKey(1), cfg)
+    s = 24
+    x = jnp.asarray(rng.normal(size=(2, s, 64)), jnp.float32)
+    pos = jnp.arange(s)[None]
+    full, cache = modules.attention_apply(p, x, cfg, positions=pos,
+                                          q_block=8, k_block=8)
+    pad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, 40 - s), (0, 0)))
+    cache = {"k": pad(cache["k"]), "v": pad(cache["v"])}
+    # per-row offsets: row 0 decodes at s, row 1 at s (vector cache_len path)
+    xt = jnp.asarray(rng.normal(size=(2, 1, 64)), jnp.float32)
+    out, _ = modules.attention_apply(
+        p, xt, cfg, positions=jnp.full((2, 1), s),
+        kv_cache=cache, cache_len=jnp.asarray([s, s]))
+    xfull = jnp.concatenate([x, xt], 1)
+    want, _ = modules.attention_apply(
+        p, xfull, cfg, positions=jnp.arange(s + 1)[None], q_block=1, k_block=1)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(want[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([8, 16, 32]), st.integers(1, 4),
+       st.sampled_from([4, 8]), st.sampled_from([2, 4]), st.integers(0, 10**6))
+def test_ssd_chunked_equals_sequential(b, s, h, p, n, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n))
+    cc = jax.random.normal(ks[4], (b, s, n))
+    for chunk in (4, 8, s):
+        if s % chunk:
+            continue
+        y1, s1 = ssd.ssd_chunked(x, dt, a, bb, cc, chunk)
+        y2, s2 = ssd.ssd_sequential(x, dt, a, bb, cc)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_block_decode_matches_full(rng):
+    cfg = _cfg(family="ssm", n_heads=0, n_kv_heads=0, d_ff=0,
+               ssm_state=16, ssm_head_dim=32, ssm_chunk=8)
+    p = ssd.mamba_init(jax.random.PRNGKey(0), cfg)
+    s = 16
+    x = jnp.asarray(rng.normal(size=(2, s, cfg.d_model)), jnp.float32)
+    full, fstate, fconv = ssd.mamba_apply(p, x, cfg)
+    st_, conv = ssd.init_mamba_state(cfg, 2)
+    outs = []
+    for i in range(s):
+        y, st_, conv = ssd.mamba_apply(p, x[:, i:i+1], cfg,
+                                       ssm_state=st_, conv_state=conv)
+        outs.append(y)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(fstate),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_pad_mask_state_exact(rng):
+    """Bucketed prefill: right-pads must not perturb the carried state."""
+    cfg = _cfg(family="ssm", n_heads=0, n_kv_heads=0, d_ff=0,
+               ssm_state=8, ssm_head_dim=32, ssm_chunk=4)
+    p = ssd.mamba_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 12, cfg.d_model)), jnp.float32)
+    _, state_exact, conv_exact = ssd.mamba_apply(p, x, cfg)
+    xpad = jnp.pad(x, ((0, 0), (0, 4), (0, 0)))
+    mask = (jnp.arange(16) < 12).astype(jnp.float32)[None]
+    _, state_pad, conv_pad = ssd.mamba_apply(
+        p, xpad, cfg, pad_mask=mask, last_valid=jnp.asarray([12]))
+    np.testing.assert_allclose(np.asarray(state_pad), np.asarray(state_exact),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(conv_pad), np.asarray(conv_exact),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 3), st.integers(4, 64),
+       st.sampled_from([4, 8, 16]), st.integers(0, 10**6))
+def test_dispatch_capacity_invariants(e, k, t, cap, seed):
+    key = jax.random.PRNGKey(seed)
+    k = min(k, e)
+    ids = jax.random.randint(key, (t, k), 0, e)
+    w = jax.nn.softmax(jax.random.normal(key, (t, k)), -1)
+    d = moe_lib.dispatch_by_expert(ids, w, e, cap)
+    dest = np.asarray(d.dest)
+    kept = dest < e * cap
+    # each expert receives at most `cap` rows
+    counts = np.bincount(dest[kept] // cap, minlength=e)
+    assert (counts <= cap).all()
+    # kept rows keep their gate weight; dropped rows zero
+    assert (np.asarray(d.weight)[~kept] == 0).all()
+    # no two kept assignments share a destination
+    assert len(np.unique(dest[kept])) == kept.sum()
+
+
+def test_moe_pad_tokens_never_consume_capacity(rng):
+    cfg = _cfg(family="moe", n_experts=4, experts_per_token=2)
+    p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)), jnp.float32)
+    mask = (jnp.arange(8) < 5).astype(jnp.float32)[None]
+    y_mask, _ = moe_lib.moe_apply(p, x, cfg, capacity=8, token_mask=mask)
+    y_exact, _ = moe_lib.moe_apply(p, x[:, :5], cfg, capacity=8)
+    np.testing.assert_allclose(np.asarray(y_mask[:, :5]), np.asarray(y_exact),
+                               rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(y_mask[:, 5:])).max() == 0.0

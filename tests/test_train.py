@@ -1,0 +1,142 @@
+"""Training substrate: optimizer math, microbatch equivalence, compression,
+loop fault-tolerance semantics."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.data.tokens import SyntheticTokens, TokenPipelineConfig
+from repro.distributed import compress
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+from repro.train.loop import StragglerMonitor, Trainer, TrainerConfig
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt_lib.OptimizerConfig(learning_rate=0.1, warmup_steps=0,
+                                  total_steps=200, weight_decay=0.0)
+    target = jnp.asarray([3.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt_lib.adamw_init(params, cfg)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt_lib.adamw_update(g, state, params, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_lr_schedule_shape():
+    cfg = opt_lib.OptimizerConfig(learning_rate=1.0, warmup_steps=10,
+                                  total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(opt_lib.lr_schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6  # floor
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+    assert abs(float(opt_lib.global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) == pytest.approx(200.0)
+
+
+def test_microbatch_equivalence(rng):
+    """1 vs 4 microbatches produce (near-)identical updates."""
+    cfg = get_config("smollm-360m").reduced(n_layers=2, dtype="float32",
+                                            remat="none")
+    opt_cfg = opt_lib.OptimizerConfig(warmup_steps=0, total_steps=10)
+    state0 = ts_lib.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 16))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 16))),
+        "loss_mask": jnp.ones((8, 16), jnp.float32),
+    }
+    s1, m1 = jax.jit(ts_lib.make_train_step(cfg, opt_cfg))(state0, batch)
+    state0b = ts_lib.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    s4, m4 = jax.jit(ts_lib.make_train_step(cfg, opt_cfg,
+                                            num_microbatches=4))(state0b, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        s1["params"], s4["params"])
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.floats(0.1, 1e4))
+def test_quantize_roundtrip_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    y = compress.quantize_dequantize(x)
+    amax = float(jnp.abs(x).max())
+    assert float(jnp.abs(x - y).max()) <= amax / 127.0 + 1e-6
+
+
+def test_compressed_train_step_close_to_exact(rng):
+    cfg = get_config("smollm-360m").reduced(n_layers=2, dtype="float32",
+                                            remat="none")
+    opt_cfg = opt_lib.OptimizerConfig(warmup_steps=0, total_steps=10)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+        "loss_mask": jnp.ones((4, 16), jnp.float32),
+    }
+    s_exact, _ = jax.jit(ts_lib.make_train_step(cfg, opt_cfg))(
+        ts_lib.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg), batch)
+    s_comp, _ = jax.jit(ts_lib.make_train_step(
+        cfg, opt_cfg, compress_gradients=True))(
+        ts_lib.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg), batch)
+    rel = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()
+                           / (jnp.abs(a.astype(jnp.float32)).max() + 1e-9)),
+        s_exact["params"], s_comp["params"])
+    assert max(jax.tree_util.tree_leaves(rel)) < 0.2
+
+
+def test_trainer_preemption_resume_exact():
+    cfg = get_config("smollm-360m").reduced(n_layers=1, dtype="float32",
+                                            remat="none")
+    opt_cfg = opt_lib.OptimizerConfig(warmup_steps=0, total_steps=50,
+                                      learning_rate=1e-3)
+    dcfg = TokenPipelineConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                               global_batch=4)
+    with tempfile.TemporaryDirectory() as d:
+        tc = lambda n: TrainerConfig(total_steps=n, checkpoint_every=100,
+                                     checkpoint_dir=d)
+        # uninterrupted run to 8
+        t_full = Trainer(cfg, opt_cfg, tc(8), SyntheticTokens(dcfg))
+        t_full.run()
+        full_params = t_full.state["params"]
+        # preempted at 4, resumed to 8
+        with tempfile.TemporaryDirectory() as d2:
+            tc2 = lambda n: TrainerConfig(total_steps=n, checkpoint_every=100,
+                                          checkpoint_dir=d2)
+            t1 = Trainer(cfg, opt_cfg, tc2(4), SyntheticTokens(dcfg))
+            t1.run()
+            t2 = Trainer(cfg, opt_cfg, tc2(8), SyntheticTokens(dcfg))
+            assert t2.try_restore()
+            assert int(t2.state["step"]) == 4 and t2.data.cursor == 4
+            t2.run()
+            diff = jax.tree_util.tree_map(
+                lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)).max()),
+                full_params, t2.state["params"])
+            assert max(jax.tree_util.tree_leaves(diff)) < 1e-5
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(n_hosts=4, factor=1.5)
+    for _ in range(5):
+        flagged = mon.observe(np.asarray([1.0, 1.0, 1.0, 5.0]))
+    assert flagged == [3]
+    plan = mon.reassignment_plan(flagged, n_shards=4)
+    assert 3 in plan and plan[3] != 3
