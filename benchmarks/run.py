@@ -1,29 +1,78 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--json PATH`` additionally writes a machine-readable name -> us_per_call
+# map (e.g. BENCH_1.json) so the perf trajectory across PRs is diffable.
+import argparse
+import contextlib
+import io
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def _parse_rows(text: str) -> dict:
+    rows = {}
+    for line in text.splitlines():
+        parts = line.split(",")
+        if len(parts) >= 2:
+            try:
+                rows[parts[0]] = float(parts[1])
+            except ValueError:
+                continue
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as a name -> us_per_call JSON "
+                         "map (convention: BENCH_<pr>.json)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run (default: all)")
+    args = ap.parse_args(argv)
+
     from benchmarks import (fig4_runtime, fig5_scaling, fig6_slot_behavior,
-                            roofline, table4_continuity, table5_controlplane)
+                            fig7_fused, roofline, table4_continuity,
+                            table5_controlplane)
 
     benches = [
         ("fig4", fig4_runtime.main),
         ("fig5", fig5_scaling.main),
         ("fig6", fig6_slot_behavior.main),
+        ("fig7", fig7_fused.main),
         ("table4", table4_continuity.main),
         ("table5", table5_controlplane.main),
         ("roofline", roofline.main),
     ]
+    if args.only:
+        wanted = set(args.only.split(","))
+        unknown = wanted - {n for n, _ in benches}
+        if unknown:
+            ap.error(f"unknown bench name(s): {sorted(unknown)} "
+                     f"(known: {[n for n, _ in benches]})")
+        benches = [(n, f) for n, f in benches if n in wanted]
+
     print("name,us_per_call,derived")
+    results: dict = {}
     failures = 0
     for name, fn in benches:
+        buf = io.StringIO()
         try:
-            fn()
+            with contextlib.redirect_stdout(buf):
+                fn()
         except Exception as e:  # keep the suite running
             failures += 1
-            print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+            buf.write(f"{name}.ERROR,0,{type(e).__name__}: {e}\n")
             traceback.print_exc(file=sys.stderr)
+        text = buf.getvalue()
+        sys.stdout.write(text)
+        sys.stdout.flush()
+        results.update(_parse_rows(text))
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(results)} entries to {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

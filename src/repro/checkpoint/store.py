@@ -24,13 +24,37 @@ from __future__ import annotations
 import hashlib
 import os
 import shutil
+import zlib
 
 import jax
 import jax.numpy as jnp
 import ml_dtypes
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # gated: fall back to stdlib zlib (codec recorded below)
+    zstd = None
+
+
+def _compressor():
+    """(codec_name, compress_fn) — zstd when available, else stdlib zlib."""
+    if zstd is not None:
+        return "zstd", zstd.ZstdCompressor(level=3).compress
+    return "zlib", lambda raw: zlib.compress(raw, 3)
+
+
+def _decompress(codec: str, blob: bytes) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd; install `zstandard` to "
+                "restore it")
+        return zstd.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _dtype_name(dt: np.dtype) -> str:
@@ -69,15 +93,16 @@ def save(directory: str, step: int, tree, extra: dict | None = None,
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
 
-    cctx = zstd.ZstdCompressor(level=3)
+    codec, compress = _compressor()
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
-    manifest: dict = {"step": step, "leaves": [], "extra": extra or {}}
+    manifest: dict = {"step": step, "codec": codec, "leaves": [],
+                      "extra": extra or {}}
     for path, leaf in leaves:
         ps = _path_str(path)
         arr = np.asarray(leaf)
         fname = _leaf_file(ps)
         with open(os.path.join(tmp, fname), "wb") as f:
-            f.write(cctx.compress(arr.tobytes()))
+            f.write(compress(arr.tobytes()))
         manifest["leaves"].append({
             "path": ps,
             "file": fname,
@@ -131,7 +156,7 @@ def restore(directory: str, step: int | None, like_tree, shardings=None):
     with open(os.path.join(ckpt, "MANIFEST.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     by_path = {e["path"]: e for e in manifest["leaves"]}
-    dctx = zstd.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")  # pre-codec checkpoints were zstd
 
     paths_leaves = jax.tree_util.tree_flatten_with_path(like_tree)[0]
     treedef = jax.tree_util.tree_structure(like_tree)
@@ -146,7 +171,7 @@ def restore(directory: str, step: int | None, like_tree, shardings=None):
             raise KeyError(f"checkpoint missing leaf {ps}")
         e = by_path[ps]
         with open(os.path.join(ckpt, e["file"]), "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = _decompress(codec, f.read())
         arr = np.frombuffer(raw, dtype=_dtype_from_name(e["dtype"])).reshape(e["shape"])
         if tuple(arr.shape) != tuple(np.shape(like)):
             raise ValueError(

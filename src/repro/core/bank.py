@@ -11,9 +11,15 @@ Selection strategies (see DESIGN.md §3):
   * ``onehot``  — contraction with ``one_hot(slots, K)``; selection becomes
                   an MXU einsum.  K x FLOPs, zero gathers — wins for small K.
   * ``grouped`` — sort rows by slot so each kernel block serves one slot,
-                  then scalar-prefetch Pallas kernels fetch only the selected
-                  slot's block from HBM (O(1) per block, the closest TPU
-                  analogue of the paper's pointer-chase).
+                  then ONE scalar-prefetch fused Pallas kernel gathers each
+                  block's rows by DMA and fetches only the selected slot's
+                  weights from HBM (O(1) per block, the closest TPU analogue
+                  of the paper's pointer-chase).  Zero-copy: the batch stays
+                  in arrival order in HBM.
+  * ``grouped_staged`` — the pre-fused layout: materialize a padded
+                  slot-sorted copy of the batch (``scatter_padded``), run the
+                  kernel, un-permute (``gather_padded``).  Kept as the
+                  fused-vs-staged benchmark baseline.
 """
 
 from __future__ import annotations
@@ -24,6 +30,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.ref import expand_block_slots
 
 Params = Any  # pytree
 
@@ -90,7 +98,7 @@ def group_by_slot(slots: jnp.ndarray, block_b: int) -> Grouping:
     blocks = sorted_slots.reshape(-1, block_b)
     block_slots = blocks[:, 0].astype(jnp.int32)
     valid_blocks = jnp.all(blocks == blocks[:, :1], axis=1)
-    valid_sorted = jnp.repeat(valid_blocks, block_b, total_repeat_length=bsz)
+    valid_sorted = expand_block_slots(valid_blocks, block_b, bsz)
     inverse = jnp.argsort(order)
     return Grouping(
         order=order,
@@ -105,15 +113,28 @@ class PaddedGrouping:
     """Exact, static-shape grouping: every block is single-slot.
 
     Each slot's segment is padded up to a multiple of ``block_b`` inside a
-    buffer of static size ``b_pad = roundup(B + K*block_b)``; padding rows are
-    zeros executed under their block's slot (wasted-but-bounded compute:
+    buffer of static size ``b_pad = roundup(B + K*block_b)``; padding rows
+    execute under their block's slot (wasted-but-bounded compute:
     < K * block_b rows).  This is the in-jit production path for the grouped
     strategy — exact per-row semantics with O(1)-per-block slot resolution.
+
+    ``row_ids`` / ``result_rows`` are the zero-copy form consumed by the
+    fused kernel's DMA gather prologue: the batch itself is never scattered
+    into the padded layout — only these two tiny int32 index vectors exist.
+    ``order``/``dest`` remain for the legacy staged path (``scatter_padded``
+    / ``gather_padded``), kept as the fused-vs-staged benchmark baseline.
     """
     order: jnp.ndarray        # (B,) stable sort permutation
     dest: jnp.ndarray         # (B,) destination of sorted row i in the padded buffer
     block_slots: jnp.ndarray  # (b_pad // block_b,) slot id per block
     b_pad: int                # static padded row count
+    row_ids: jnp.ndarray      # (b_pad,) source row per padded position (pad -> 0)
+    result_rows: jnp.ndarray  # (B,) padded position holding row i's result
+
+
+def _exclusive_cumsum(x: jnp.ndarray) -> jnp.ndarray:
+    """[x0, x1, ...] -> [0, x0, x0+x1, ...] (segment start offsets)."""
+    return jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)[:-1]])
 
 
 def group_by_slot_padded(
@@ -124,20 +145,18 @@ def group_by_slot_padded(
     sorted_slots = slots[order]
     counts = jnp.bincount(slots, length=num_slots)
     padded = ((counts + block_b - 1) // block_b) * block_b
-    seg_start = jnp.concatenate(
-        [jnp.zeros(1, padded.dtype), jnp.cumsum(padded)[:-1]]
-    )
-    count_start = jnp.concatenate(
-        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]]
-    )
-    rank = jnp.arange(b) - count_start[sorted_slots]
-    dest = (seg_start[sorted_slots] + rank).astype(jnp.int32)
+    rank = jnp.arange(b) - _exclusive_cumsum(counts)[sorted_slots]
+    dest = (_exclusive_cumsum(padded)[sorted_slots] + rank).astype(jnp.int32)
     b_pad = ((b + num_slots * block_b + block_b - 1) // block_b) * block_b
     seg_end = jnp.cumsum(padded)
     block_starts = jnp.arange(b_pad // block_b) * block_b
     block_seg = jnp.searchsorted(seg_end, block_starts, side="right")
     block_slots = jnp.clip(block_seg, 0, num_slots - 1).astype(jnp.int32)
-    return PaddedGrouping(order=order, dest=dest, block_slots=block_slots, b_pad=b_pad)
+    row_ids = jnp.zeros(b_pad, jnp.int32).at[dest].set(order.astype(jnp.int32))
+    result_rows = jnp.zeros(b, jnp.int32).at[order].set(dest)
+    return PaddedGrouping(order=order, dest=dest, block_slots=block_slots,
+                          b_pad=b_pad, row_ids=row_ids,
+                          result_rows=result_rows)
 
 
 def scatter_padded(x: jnp.ndarray, g: PaddedGrouping) -> jnp.ndarray:

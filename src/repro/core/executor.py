@@ -71,14 +71,25 @@ def forward(params, payload_words, *, backend: str = "auto"):
 
 def forward_banked(bank, payload_words, slots, *, strategy: str = "take",
                    backend: str = "auto", block_b: int = 256):
-    """Slot-selected executor over the resident bank."""
+    """Slot-selected executor over the resident bank.
+
+    ``grouped`` runs the zero-copy fused megakernel (one launch, DMA gather
+    prologue, no padded batch materialized in HBM); ``grouped_staged`` keeps
+    the pre-fused scatter -> kernel -> gather layout as a benchmark baseline.
+    """
     if strategy in ("take", "onehot"):
         be = "mxu" if strategy == "onehot" else backend
         return ops.bnn_forward_banked(bank, payload_words, slots, backend=be)
-    if strategy == "grouped":
-        num_slots = bank_lib.bank_size(bank)
-        bb = min(block_b, payload_words.shape[0])
-        g = bank_lib.group_by_slot_padded(slots, num_slots, bb)
+    num_slots = bank_lib.bank_size(bank)
+    bb = min(block_b, payload_words.shape[0])
+    g = bank_lib.group_by_slot_padded(slots, num_slots, bb)
+    if strategy in ("grouped", "fused"):
+        y_pad = ops.bnn_forward_fused(
+            bank, payload_words, g.block_slots, g.row_ids,
+            block_b=bb, backend=backend,
+        )
+        return jnp.take(y_pad, g.result_rows, axis=0)
+    if strategy == "grouped_staged":
         x_pad = bank_lib.scatter_padded(payload_words, g)
         y_pad = ops.bnn_forward_grouped(
             bank, x_pad, g.block_slots, block_b=bb, backend=backend

@@ -23,7 +23,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import executor, packet as pkt
+from repro.core import bank as bank_lib, executor, packet as pkt
+from repro.kernels import fused_forward as _fused_kernel
+from repro.kernels import ops
+
+# The kernel package mirrors the reg0 layout so it stays core-free; make the
+# mirror impossible to drift silently.
+assert _fused_kernel.CTRL_WORD == pkt.CONTROL_WORD_LO
+assert _fused_kernel.CTRL_MONITOR_ONLY == int(pkt.CTRL_MONITOR_ONLY)
+assert (_fused_kernel.ACTION_FORWARD, _fused_kernel.ACTION_DROP,
+        _fused_kernel.ACTION_FLAG) == (pkt.ACTION_FORWARD, pkt.ACTION_DROP,
+                                       pkt.ACTION_FLAG)
 
 
 class PacketResult(NamedTuple):
@@ -34,7 +44,9 @@ class PacketResult(NamedTuple):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_slots", "strategy", "backend", "fixed_slot")
+    jax.jit,
+    static_argnames=("num_slots", "strategy", "backend", "fixed_slot",
+                     "block_b"),
 )
 def packet_step(
     bank,
@@ -44,15 +56,34 @@ def packet_step(
     strategy: str = "take",
     backend: str = "auto",
     fixed_slot: int | None = None,
+    block_b: int = 256,
 ) -> PacketResult:
-    """Process one batch of packets along the shared forwarding path."""
+    """Process one batch of packets along the shared forwarding path.
+
+    ``strategy="fused"`` runs steps 1-5 as ONE Pallas launch over the raw
+    packet rows: the kernel gathers each block's packets by DMA, slices the
+    payload, runs the banked BNN in VMEM, and emits verdict + Pi action —
+    no payload view, no padded batch copy, no HBM intermediates.  The other
+    strategies share the staged executor (`executor.forward_banked`).
+    """
     if fixed_slot is None:
         slots = pkt.slot_of(packets, num_slots)           # sigma(m_p)
     else:  # baseline operating mode: fixed single-model path
         slots = jnp.full(packets.shape[:1], fixed_slot, jnp.int32)
+    if strategy == "fused":
+        bb = min(block_b, packets.shape[0])
+        g = bank_lib.group_by_slot_padded(slots, num_slots, bb)
+        scores_pad, actions_pad = ops.packet_forward_fused(
+            bank, packets, g.block_slots, g.row_ids,
+            meta_words=pkt.META_WORDS, block_b=bb, backend=backend,
+        )
+        scores = jnp.take(scores_pad[:, 0], g.result_rows)
+        actions = jnp.take(actions_pad, g.result_rows)
+        return PacketResult(slots, scores, scores > 0.0, actions)
     payload = pkt.payload_of(packets)                     # x_p
     scores = executor.forward_banked(
-        bank, payload, slots, strategy=strategy, backend=backend
+        bank, payload, slots, strategy=strategy, backend=backend,
+        block_b=block_b,
     )[:, 0]                                               # y_p
     actions = pkt.decide_action(packets, scores)          # Pi(m_p, y_p)
     return PacketResult(slots, scores, scores > 0.0, actions)

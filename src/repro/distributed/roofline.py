@@ -57,6 +57,19 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as one dict-shaped record.
+
+    Older jaxlibs return a one-element list of per-device dicts; newer ones
+    return the dict directly.  Every consumer of the analyzer expects the
+    dict schema, so normalize here.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _shape_bytes(dtype: str, dims_str: str) -> int:
     n = 1
     if dims_str:

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from . import ref as _ref
 from . import bnn_xnor as _bnn_xnor
 from . import banked_matmul as _banked
+from . import fused_forward as _fused
 
 
 def _on_tpu() -> bool:
@@ -97,24 +98,68 @@ def bnn_forward_grouped(
     Rows must be pre-grouped so each ``block_b`` block shares a slot
     (``repro.core.bank.group_by_slot``).  block_slots: (B // block_b,) i32.
     """
-    backend = _resolve(backend)
-    interpret = not _on_tpu()
-    bsz = x_packed.shape[0]
-    bb = min(block_b, bsz)
-    if backend == "ref":
-        slots = jnp.repeat(block_slots, bb, total_repeat_length=bsz)
-        return _ref.banked_xnor_forward_ref(
-            bank["w1p"], bank["b1"], bank["w2"], bank["b2"], x_packed, slots
-        )
-    pre = _banked.banked_xnor_layer1(
-        x_packed, bank["w1p"], bank["b1"], block_slots,
-        block_b=bb, interpret=interpret,
+    bb = min(block_b, x_packed.shape[0])
+    # contiguous fused mode: one launch, layer 1 + sign + layer 2 in VMEM
+    return bnn_forward_fused(
+        bank, x_packed, block_slots, None, block_b=bb, backend=backend
     )
-    h = jnp.where(pre >= 0, 1.0, -1.0)
-    y = jnp.einsum("bh,bch->bc", h, bank["w2"][jnp.repeat(
-        block_slots, bb, total_repeat_length=bsz)])
-    y = y + bank["b2"][jnp.repeat(block_slots, bb, total_repeat_length=bsz)]
-    return y
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "backend"))
+def bnn_forward_fused(
+    bank, x_packed, block_slots, row_ids=None, *, block_b: int = 256,
+    backend: str = "auto",
+):
+    """Zero-copy fused BNN forward: one kernel launch, gather prologue.
+
+    ``row_ids`` maps output row r to input row ``row_ids[r]`` so the batch
+    never has to be re-laid-out in HBM (``repro.core.bank.group_by_slot_padded``
+    provides it).  ``row_ids=None`` means rows are already grouped
+    contiguously.  The ref/mxu backends reproduce the same semantics with a
+    jnp gather — the oracle for parity tests.
+    """
+    backend = _resolve(backend)
+    n_rows = block_slots.shape[0] * block_b if row_ids is None \
+        else row_ids.shape[0]
+    if backend in ("ref", "mxu"):
+        rows = x_packed if row_ids is None \
+            else jnp.take(x_packed, row_ids, axis=0)
+        slots = _ref.expand_block_slots(block_slots, block_b, n_rows)
+        return _ref.banked_xnor_forward_ref(
+            bank["w1p"], bank["b1"], bank["w2"], bank["b2"], rows, slots
+        )
+    return _fused.fused_forward(
+        x_packed, bank["w1p"], bank["b1"], bank["w2"], bank["b2"],
+        block_slots, row_ids, block_b=block_b, interpret=not _on_tpu(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("meta_words", "block_b", "backend"))
+def packet_forward_fused(
+    bank, packets, block_slots, row_ids, *, meta_words: int,
+    block_b: int = 256, backend: str = "auto",
+):
+    """Whole forwarding path in one launch: parse + select + BNN + Pi.
+
+    ``packets`` are raw (B, meta_words + W) uint32 rows in arrival order;
+    the kernel gathers each block's rows by DMA, slices the payload, and
+    emits (scores, actions).  Returns ``(n_rows, C) f32, (n_rows,) i32``.
+    """
+    backend = _resolve(backend)
+    if backend in ("ref", "mxu"):
+        rows = jnp.take(packets, row_ids, axis=0)
+        payload = rows[:, meta_words:]
+        slots = _ref.expand_block_slots(block_slots, block_b, row_ids.shape[0])
+        scores = _ref.banked_xnor_forward_ref(
+            bank["w1p"], bank["b1"], bank["w2"], bank["b2"], payload, slots
+        )
+        return scores, _fused.actions_ref(scores, rows[:, _fused.CTRL_WORD])
+    scores, actions = _fused.fused_forward(
+        packets, bank["w1p"], bank["b1"], bank["w2"], bank["b2"],
+        block_slots, row_ids, block_b=block_b, meta_words=meta_words,
+        with_actions=True, interpret=not _on_tpu(),
+    )
+    return scores, actions[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "backend"))
@@ -124,7 +169,7 @@ def banked_matmul(x, w, b, block_slots, *, block_b: int = 128, backend: str = "a
     bsz = x.shape[0]
     bb = min(block_b, bsz)
     if backend == "ref":
-        slots = jnp.repeat(block_slots, bb, total_repeat_length=bsz)
+        slots = _ref.expand_block_slots(block_slots, bb, bsz)
         return _ref.banked_matmul_ref(x, w, b, slots)
     return _banked.banked_matmul(
         x, w, b, block_slots, block_b=bb, interpret=not _on_tpu()

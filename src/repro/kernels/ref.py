@@ -48,6 +48,17 @@ def unpack_bits(packed: jnp.ndarray, d: int) -> jnp.ndarray:
 # kernel oracles
 # ---------------------------------------------------------------------------
 
+def expand_block_slots(block_slots: jnp.ndarray, block_b: int,
+                       total: int) -> jnp.ndarray:
+    """Broadcast per-block slot ids to per-row ids: (n_blocks,) -> (total,).
+
+    The single home for the ``jnp.repeat(block_slots, block_b, ...)`` pattern
+    the grouped oracles need (the fused Pallas path reads the block id from
+    SMEM instead and never materializes this).
+    """
+    return jnp.repeat(block_slots, block_b, total_repeat_length=total)
+
+
 def xnor_matmul_ref(x_packed: jnp.ndarray, w_packed: jnp.ndarray) -> jnp.ndarray:
     """Binary matmul oracle.
 

@@ -223,7 +223,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     except Exception as e:  # pragma: no cover
         result["memory"] = {"error": str(e)}
     try:
-        ca = compiled.cost_analysis()
+        ca = rf.xla_cost_analysis(compiled)
         result["xla_cost"] = {
             "flops": ca.get("flops"), "bytes accessed": ca.get("bytes accessed")
         }

@@ -29,7 +29,11 @@ def main():
     ap.add_argument("--samples-per-group", type=int, default=1024)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--strategy", default="take",
-                    choices=["take", "onehot", "grouped"])
+                    choices=["take", "onehot", "grouped", "grouped_staged",
+                             "fused"])
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming replay: async dispatch with a bounded "
+                         "in-flight window instead of per-batch blocking")
     args = ap.parse_args()
 
     print("== training resident slot models (STE, pos_weight 4.0 / 0.5) ==")
@@ -65,7 +69,7 @@ def main():
           f"{mpps * pkt.PAYLOAD_BYTES * 8 / 1e3:.2f} Gbps @1024B payload")
 
     rr = switching.replay_trace(bank, trace[:1024], num_slots=2,
-                                strategy=args.strategy)
+                                strategy=args.strategy, stream=args.stream)
     g = rr.gap_stats_us()
     k = rr.rate_kpps()
     print(f"per-packet replay: wrong_slot={rr.wrong_slot} "

@@ -139,7 +139,7 @@ def test_roofline_analyzer_counts_loops():
     want = 2 * 64 * 64 * 64 * 12
     assert abs(res["dot_flops"] - want) / want < 0.05, res["dot_flops"]
     # and the body-once xla number really is ~12x smaller
-    xla = compiled.cost_analysis()["flops"]
+    xla = rf.xla_cost_analysis(compiled)["flops"]
     assert res["dot_flops"] > 8 * xla
 
 

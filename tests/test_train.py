@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.registry import get_config
 from repro.data.tokens import SyntheticTokens, TokenPipelineConfig
