@@ -30,6 +30,19 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.4f},{derived}")
 
 
+def parse_csv_rows(text: str) -> dict:
+    """``name,value,...`` CSV lines -> {name: float} (non-numeric skipped)."""
+    rows = {}
+    for line in text.splitlines():
+        parts = line.split(",")
+        if len(parts) >= 2:
+            try:
+                rows[parts[0]] = float(parts[1])
+            except ValueError:
+                continue
+    return rows
+
+
 @functools.lru_cache(maxsize=1)
 def trained_bank():
     """Train the paper's two slots once per process (cached)."""
@@ -50,3 +63,41 @@ def bank_with_slots(num_slots: int):
     _, s0, s1 = trained_bank()
     return bank_lib.stack_bank(
         [s0 if i % 2 == 0 else s1 for i in range(num_slots)])
+
+
+# ---------------------------------------------------------------------------
+# traced-program structural audit (shared by fig7 / fig8)
+# ---------------------------------------------------------------------------
+
+PAYLOAD_SIZED_PRIMS = ("scatter", "scatter-add", "gather")
+
+
+def walk_jaxpr(jaxpr, counts: dict, threshold: int) -> None:
+    """Count ``pallas_call`` launches and payload-sized scatter/gather bytes
+    in a (possibly nested) jaxpr."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            counts["kernel_launches"] += 1
+        if name in PAYLOAD_SIZED_PRIMS:
+            nbytes = sum(
+                int(np.prod(v.aval.shape)) * v.aval.dtype.itemsize
+                for v in eqn.outvars
+            )
+            if nbytes >= threshold:
+                counts["payload_roundtrip_bytes"] += nbytes
+        for param in eqn.params.values():
+            for sub in param if isinstance(param, (list, tuple)) else [param]:
+                closed = getattr(sub, "jaxpr", None)
+                if closed is not None and hasattr(sub, "eqns"):
+                    walk_jaxpr(sub, counts, threshold)  # raw Jaxpr
+                elif closed is not None and hasattr(closed, "eqns"):
+                    walk_jaxpr(closed, counts, threshold)  # ClosedJaxpr
+
+
+def jaxpr_stats(fn, *args, payload_threshold: int = 0) -> dict:
+    """Trace ``fn(*args)`` and return its structural launch/traffic counts."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    counts = {"kernel_launches": 0, "payload_roundtrip_bytes": 0}
+    walk_jaxpr(jaxpr.jaxpr, counts, payload_threshold)
+    return counts

@@ -1,24 +1,93 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # ``--json PATH`` additionally writes a machine-readable name -> us_per_call
-# map (e.g. BENCH_1.json) so the perf trajectory across PRs is diffable.
+# map (e.g. BENCH_1.json) so the perf trajectory across PRs is diffable;
+# ``--compare BASELINE.json`` exits nonzero on >25% regression of any key
+# shared with the baseline (the CI regression guard).
 import argparse
 import contextlib
 import io
 import json
+import statistics
 import sys
 import traceback
 
+REGRESSION_THRESHOLD = 0.25
+
+# keys where larger is better (throughput); everything else is
+# us/bytes/launch-count style where smaller is better.
+_HIGHER_BETTER = ("kpps", "mpps", "pps")
+
 
 def _parse_rows(text: str) -> dict:
-    rows = {}
-    for line in text.splitlines():
-        parts = line.split(",")
-        if len(parts) >= 2:
-            try:
-                rows[parts[0]] = float(parts[1])
-            except ValueError:
-                continue
-    return rows
+    from benchmarks.common import parse_csv_rows
+    return parse_csv_rows(text)
+
+
+def _is_throughput(key: str) -> bool:
+    return any(key.endswith(suf) for suf in _HIGHER_BETTER)
+
+
+_MIN_NORMALIZE_KEYS = 4
+
+
+def _speed_factor(results: dict, baseline: dict, shared) -> float:
+    """Median uniform slowdown of this machine vs the baseline machine,
+    estimated over the non-structural (timing/throughput) shared keys.
+    1.0 = same speed; 1.4 = everything uniformly 40% slower.
+
+    With fewer than ``_MIN_NORMALIZE_KEYS`` samples the median IS the keys
+    under test (a regression would normalize itself away), so we fall
+    back to raw comparison (factor 1.0)."""
+    ratios = []
+    for key in shared:
+        if ".audit." in key or baseline[key] <= 0 or results[key] <= 0:
+            continue
+        r = results[key] / baseline[key]
+        ratios.append(1.0 / r if _is_throughput(key) else r)
+    if len(ratios) < _MIN_NORMALIZE_KEYS:
+        return 1.0
+    return statistics.median(ratios)
+
+
+def compare_results(results: dict, baseline: dict,
+                    threshold: float = REGRESSION_THRESHOLD,
+                    normalize: bool = False) -> list[str]:
+    """Regressions of ``results`` vs ``baseline`` over their shared keys.
+
+    Throughput-style keys (``*pps``) regress by dropping; cost-style keys
+    (us/bytes/counts) regress by growing.  A zero-cost baseline (e.g. the
+    structural ``expect=0`` audits) regresses on ANY nonzero value.
+
+    ``normalize=True`` divides out the median machine-speed factor before
+    applying the threshold, so a uniformly slower machine (a different CI
+    runner class) does not flag every key — only keys that regress
+    *relative to the rest of the suite* do.  Structural ``.audit.`` keys
+    are never normalized.  The trade-off: a change that slows every path
+    by the same factor is invisible under normalization; with fewer than
+    ``_MIN_NORMALIZE_KEYS`` shared timing keys normalization disables
+    itself and the comparison is raw.
+    """
+    shared = sorted(set(results) & set(baseline))
+    speed = _speed_factor(results, baseline, shared) if normalize else 1.0
+    regressions = []
+    for key in shared:
+        base, new = baseline[key], results[key]
+        adj = speed if (normalize and ".audit." not in key) else 1.0
+        if _is_throughput(key):
+            if base > 0 and new * adj < base * (1 - threshold):
+                regressions.append(
+                    f"{key}: {new:.4g} < {base:.4g} "
+                    f"(-{(1 - new * adj / base) * 100:.0f}% at speed "
+                    f"factor {speed:.2f})")
+        elif base == 0:
+            if new > 0:
+                regressions.append(f"{key}: {new:.4g} > 0 (baseline 0)")
+        elif new / adj > base * (1 + threshold):
+            regressions.append(
+                f"{key}: {new:.4g} > {base:.4g} "
+                f"(+{(new / adj / base - 1) * 100:.0f}% at speed "
+                f"factor {speed:.2f})")
+    return regressions
 
 
 def main(argv=None) -> None:
@@ -28,17 +97,26 @@ def main(argv=None) -> None:
                          "map (convention: BENCH_<pr>.json)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names to run (default: all)")
+    ap.add_argument("--compare", metavar="BASELINE", default=None,
+                    help="baseline JSON (e.g. BENCH_1.json); exit nonzero on "
+                         f">{REGRESSION_THRESHOLD:.0%}".replace("%", "%%")
+                         + " regression of any shared key")
+    ap.add_argument("--compare-normalize", action="store_true",
+                    help="divide out the median machine-speed factor before "
+                         "thresholding (for baselines recorded on different "
+                         "hardware, e.g. CI runners)")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig4_runtime, fig5_scaling, fig6_slot_behavior,
-                            fig7_fused, roofline, table4_continuity,
-                            table5_controlplane)
+                            fig7_fused, fig8_dataplane, roofline,
+                            table4_continuity, table5_controlplane)
 
     benches = [
         ("fig4", fig4_runtime.main),
         ("fig5", fig5_scaling.main),
         ("fig6", fig6_slot_behavior.main),
         ("fig7", fig7_fused.main),
+        ("fig8", fig8_dataplane.main),
         ("table4", table4_continuity.main),
         ("table5", table5_controlplane.main),
         ("roofline", roofline.main),
@@ -73,6 +151,18 @@ def main(argv=None) -> None:
             json.dump(results, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {len(results)} entries to {args.json}", file=sys.stderr)
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        regressions = compare_results(results, baseline,
+                                      normalize=args.compare_normalize)
+        shared = len(set(results) & set(baseline))
+        print(f"# compared {shared} shared keys vs {args.compare}: "
+              f"{len(regressions)} regression(s)", file=sys.stderr)
+        for r in regressions:
+            print(f"# REGRESSION {r}", file=sys.stderr)
+        if regressions:
+            sys.exit(2)
     if failures:
         sys.exit(1)
 

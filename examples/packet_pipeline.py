@@ -2,6 +2,10 @@
 the synthetic IoT-23-like workload, preload the bank, replay a boundary
 stream, and report the headline numbers (Fig. 4 / Table IV analogues).
 
+Runs the ``fused`` strategy (the one-launch megakernel hot path) by
+default, like the driver it wraps; pass a trailing ``--strategy take``
+to fall back to the exact per-row baseline.
+
 Run:  PYTHONPATH=src python examples/packet_pipeline.py
 (equivalent to: python -m repro.launch.packetpath --packets 2048)
 """
@@ -10,5 +14,5 @@ from repro.launch import packetpath
 import sys
 
 sys.argv = [sys.argv[0], "--packets", "2048", "--epochs", "2",
-            "--samples-per-group", "512"]
+            "--samples-per-group", "512", *sys.argv[1:]]
 packetpath.main()

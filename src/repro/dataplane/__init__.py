@@ -1,0 +1,15 @@
+"""Multi-queue data-plane runtime (DESIGN.md §6).
+
+The AF_XDP deployment shape in software: ``rss`` hashes flows to queues,
+``ring`` buffers each queue with counted tail-drop, ``runtime`` fans the
+fused forwarding program out across queues (loop / vmap / shard_map),
+``telemetry`` exports per-queue counters, and ``scenarios`` generates
+phased emergency traffic to drive it all.
+"""
+
+from repro.dataplane.ring import PacketRing, RingCounters  # noqa: F401
+from repro.dataplane.runtime import DataplaneRuntime, queue_mesh  # noqa: F401
+from repro.dataplane.scenarios import (  # noqa: F401
+    Phase, ScenarioTrace, emergency_phases, play, render, SEQ_WORD,
+)
+from repro.dataplane import rss, telemetry  # noqa: F401

@@ -1,0 +1,271 @@
+"""Multi-queue data-plane runtime: RSS dispatch -> rings -> sharded workers.
+
+This is the repo's analogue of the paper's AF_XDP deployment shape: the
+NIC hashes each flow to one of N queues (``rss``), every queue buffers
+into a bounded ring (``ring``), and each queue drains through the *same*
+resident-bank forwarding program (`repro.core.pipeline.packet_step`) —
+one fused launch per queue-block, per-queue FIFO ordering, and online
+slot swaps that never produce a wrong verdict.
+
+Fan-out modes (``fanout=``):
+
+* ``loop``      — one jitted ``packet_step`` call per non-empty queue per
+                  tick.  The default for the fused strategy: the
+                  structural audit can assert exactly ONE Pallas launch
+                  per queue-block.
+* ``vmap``      — queue batches stacked to (Q, B, 272) and processed by a
+                  single vmapped program; best for the gather strategies
+                  on one device.
+* ``shard_map`` — the vmapped program sharded over a device mesh (reusing
+                  `repro.launch.mesh.make_host_mesh`), so queues map onto
+                  devices exactly like RSS maps flows onto NIC queues.
+                  Host-simulated on 1-device CPU CI; real spread on TPU.
+* ``auto``      — ``loop`` for fused/grouped strategies, ``vmap`` else.
+
+Every tick pops at most ``batch`` rows per queue, pads to the static batch
+shape (no recompiles), runs the workers, then retires rows against the
+ring counters so ``admitted == completed + occupancy`` holds at any
+instant.  ``audit=True`` re-scores every tick through the exact ``take``
+path and counts verdict mismatches — the multi-queue extension of the
+``replay_trace`` zero-wrong-verdict regression, valid across online
+``swap_slot`` updates because both paths read the same bank version.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bank as bank_lib, pipeline
+from repro.dataplane import rss
+from repro.dataplane.ring import PacketRing
+from repro.dataplane.scenarios import SEQ_WORD
+from repro.dataplane.telemetry import Telemetry
+from repro.launch import mesh as mesh_lib
+
+_LOOP_STRATEGIES = ("fused", "grouped", "grouped_staged")
+
+
+def queue_mesh(num_queues: int):
+    """A mesh whose leading axis shards the queue dimension.
+
+    Reuses the production host mesh when its data axis divides the queue
+    count; otherwise builds a dedicated 1-axis mesh over the largest
+    device count that does.
+    """
+    m = mesh_lib.make_host_mesh(1)
+    if num_queues % m.devices.shape[0] == 0:
+        return m, "data"
+    d = math.gcd(num_queues, jax.device_count())
+    return jax.make_mesh((d,), ("queues",)), "queues"
+
+
+class DataplaneRuntime:
+    def __init__(
+        self,
+        bank,
+        *,
+        num_queues: int,
+        num_slots: int | None = None,
+        strategy: str = "fused",
+        fanout: str = "auto",
+        batch: int = 128,
+        block_b: int = 32,
+        ring_capacity: int = 2048,
+        backend: str = "auto",
+        rss_key: bytes = rss.DEFAULT_KEY,
+        audit: bool = False,
+        record: bool = False,
+    ):
+        self.bank = bank
+        self.num_queues = int(num_queues)
+        self.num_slots = int(num_slots if num_slots is not None
+                             else bank_lib.bank_size(bank))
+        self.strategy = strategy
+        self.batch = int(batch)
+        self.block_b = min(int(block_b), self.batch)
+        self.backend = backend
+        self.rss_key = rss_key
+        self.audit = audit
+        self.reta = rss.indirection_table(self.num_queues)
+        self.rings = [PacketRing(ring_capacity) for _ in range(self.num_queues)]
+        self.telemetry = Telemetry(self.num_queues, self.num_slots)
+        self._record = record
+        self.completed_seq = [[] for _ in range(self.num_queues)]
+        self.completed_verdicts = [[] for _ in range(self.num_queues)]
+        self.completed_slots = [[] for _ in range(self.num_queues)]
+        self.dropped_seq: list[int] = []
+        self._t_start: float | None = None
+        if fanout == "auto":
+            fanout = "loop" if strategy in _LOOP_STRATEGIES else "vmap"
+        if fanout not in ("loop", "vmap", "shard_map"):
+            raise ValueError(f"unknown fanout {fanout!r}")
+        self.fanout = fanout
+        self._vstep = None if fanout == "loop" else self._build_fanout(fanout)
+
+    # -- worker construction ------------------------------------------------
+
+    def _step_kwargs(self) -> dict:
+        return dict(num_slots=self.num_slots, strategy=self.strategy,
+                    backend=self.backend, block_b=self.block_b)
+
+    def _build_fanout(self, fanout: str):
+        kw = self._step_kwargs()
+
+        def per_queue(bank, qpackets):  # (Qlocal, B, 272) -> PacketResult
+            return jax.vmap(
+                lambda p: pipeline.packet_step(bank, p, **kw))(qpackets)
+
+        if fanout == "vmap":
+            return jax.jit(per_queue)
+        mesh, axis = queue_mesh(self.num_queues)
+        return jax.jit(shard_map(
+            per_queue, mesh=mesh,
+            in_specs=(P(), P(axis)), out_specs=P(axis), check_rep=False,
+        ))
+
+    # -- control plane ------------------------------------------------------
+
+    def swap_slot(self, k: int, params) -> None:
+        """Online resident-slot replacement: the bank array is updated
+        between ticks; in-flight rows of other slots are unaffected."""
+        self.bank = bank_lib.update_slot(self.bank, k, params)
+        self.telemetry.slot_swaps += 1
+
+    def set_reta(self, reta: np.ndarray) -> None:
+        reta = np.asarray(reta, np.int32)
+        if reta.min() < 0 or reta.max() >= self.num_queues:
+            raise ValueError("RETA entry out of queue range")
+        self.reta = reta
+        self.telemetry.reta_updates += 1
+
+    def fail_queues(self, failed: tuple[int, ...]) -> None:
+        self.set_reta(rss.failover_table(
+            self.reta, failed, num_queues=self.num_queues))
+
+    def reset_reta(self) -> None:
+        self.set_reta(rss.indirection_table(self.num_queues))
+
+    # -- data plane ---------------------------------------------------------
+
+    def dispatch(self, packets_np: np.ndarray, now: float | None = None) -> dict:
+        """RSS-dispatch one arrival burst into the per-queue rings."""
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        if now is None:
+            now = time.perf_counter()
+        packets_np = np.asarray(packets_np)
+        q = rss.queue_of(packets_np, self.num_queues,
+                         key=self.rss_key, reta=self.reta)
+        per_queue = []
+        for i, ring in enumerate(self.rings):
+            rows = packets_np[q == i]
+            admitted = ring.push(rows, now)
+            if self._record and admitted < rows.shape[0]:
+                self.dropped_seq.extend(
+                    int(s) for s in rows[admitted:, SEQ_WORD])
+            per_queue.append({"offered": int(rows.shape[0]),
+                              "admitted": admitted,
+                              "dropped": int(rows.shape[0]) - admitted})
+        return {"per_queue": per_queue,
+                "dropped": sum(p["dropped"] for p in per_queue)}
+
+    def _pad(self, rows: np.ndarray) -> np.ndarray:
+        n = rows.shape[0]
+        if n == self.batch:
+            return rows
+        out = np.zeros((self.batch, rows.shape[1]), np.uint32)
+        out[:n] = rows
+        if n:  # repeat the last valid row; results beyond n are discarded
+            out[n:] = rows[n - 1]
+        return out
+
+    def tick(self) -> int:
+        """Drain up to ``batch`` rows per queue through the workers."""
+        popped = [ring.pop(self.batch) for ring in self.rings]
+        counts = [rows.shape[0] for rows, _ in popped]
+        total = sum(counts)
+        if total == 0:
+            return 0
+        t0 = time.perf_counter()
+        if self.fanout == "loop":
+            results = {}
+            for q, (rows, _) in enumerate(popped):
+                if counts[q] == 0:
+                    continue
+                results[q] = pipeline.packet_step(
+                    self.bank, jnp.asarray(self._pad(rows)),
+                    **self._step_kwargs())
+            for res in results.values():
+                res.scores.block_until_ready()
+        else:
+            qstack = np.stack([self._pad(rows) for rows, _ in popped])
+            res_all = self._vstep(self.bank, jnp.asarray(qstack))
+            res_all.scores.block_until_ready()
+            results = {
+                q: pipeline.PacketResult(*(leaf[q] for leaf in res_all))
+                for q in range(self.num_queues) if counts[q]
+            }
+        now = time.perf_counter()
+        tick_s = now - t0
+        for q, res in results.items():
+            n = counts[q]
+            rows, ts = popped[q]
+            slots = np.asarray(res.slots)[:n]
+            verdicts = np.asarray(res.verdicts)[:n]
+            actions = np.asarray(res.actions)[:n]
+            self.telemetry.record_tick(
+                q, slots, verdicts, actions,
+                latency_us=(now - ts) * 1e6,
+                tick_s=tick_s * n / total,
+            )
+            self.rings[q].mark_completed(n)
+            if self.audit:
+                exact = pipeline.packet_step(
+                    self.bank, jnp.asarray(self._pad(rows)),
+                    num_slots=self.num_slots, strategy="take",
+                    backend=self.backend)
+                bad = (np.asarray(exact.verdicts)[:n] != verdicts).sum()
+                bad += (np.asarray(exact.slots)[:n] != slots).sum()
+                self.telemetry.wrong_verdict += int(bad)
+            if self._record:
+                self.completed_seq[q].extend(int(s) for s in rows[:, SEQ_WORD])
+                self.completed_verdicts[q].extend(bool(v) for v in verdicts)
+                self.completed_slots[q].extend(int(s) for s in slots)
+        return total
+
+    def drain(self, max_ticks: int = 100_000) -> int:
+        done = 0
+        for _ in range(max_ticks):
+            n = self.tick()
+            done += n
+            if n == 0 and not any(len(r) for r in self.rings):
+                return done
+        raise RuntimeError("drain did not converge")
+
+    # -- audit + reporting --------------------------------------------------
+
+    def audit_conservation(self) -> dict:
+        """Per-queue + aggregate packet conservation; must always hold."""
+        per_queue = [ring.conservation() for ring in self.rings]
+        totals = {k: sum(c[k] for c in per_queue)
+                  for k in ("offered", "admitted", "dropped", "completed",
+                            "occupancy")}
+        ok = all(c["producer_ok"] and c["consumer_ok"] for c in per_queue)
+        return {"per_queue": per_queue, "totals": totals, "ok": ok,
+                "wrong_verdict": self.telemetry.wrong_verdict}
+
+    def snapshot(self) -> dict:
+        elapsed = (time.perf_counter() - self._t_start
+                   if self._t_start is not None else None)
+        out = self.telemetry.snapshot(elapsed_s=elapsed)
+        out["conservation"] = self.audit_conservation()
+        out["fanout"] = self.fanout
+        out["strategy"] = self.strategy
+        return out

@@ -1,0 +1,195 @@
+"""Emergency-scenario traffic engine: phased, replayable packet workloads.
+
+Emergency communications traffic is not a steady stream — the FENIX /
+Emergency-HRL line of work stresses exactly the regimes a disaster
+produces: a calm baseline, a *flash crowd* when everyone transmits at
+once, *link failover* when infrastructure dies and surviving queues absorb
+remapped flows, and *slot churn* while operators push updated models into
+the resident bank mid-event.  This module emits those regimes as
+deterministic, replayable traces:
+
+* a ``Phase`` describes one regime: ticks, burst size (arrival rate), the
+  number of active flows (few elephant flows during a flash crowd, many
+  mice in steady state), the slot mix the traffic selects, queues that
+  fail at phase entry, and an optional resident-slot swap;
+* ``render`` expands phases into per-tick packet bursts.  Every packet
+  carries its flow tuple in reg0 words 4..7 (RSS input) and a globally
+  monotonic sequence stamp in word 15, so conservation and per-queue
+  ordering are checkable after the fact;
+* ``play`` drives a ``DataplaneRuntime`` through a rendered trace,
+  applying failovers/swaps at phase boundaries and returning per-phase
+  reports (completed, dropped, wrong verdicts, throughput).
+
+Same phases + same seed -> byte-identical trace, always.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import executor, packet as pkt
+from repro.dataplane import rss
+
+# reg0 spare word 15: globally monotonic emission sequence number.
+SEQ_WORD = 15
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    name: str
+    ticks: int
+    burst: int                      # packets per tick (arrival rate)
+    flows: int                      # active flow count
+    slot_mix: tuple[float, ...]     # per-slot selection probabilities
+    failed_queues: tuple[int, ...] = ()   # queues that die at phase entry
+    swap_slot: int | None = None    # resident slot replaced at phase entry
+    monitor_frac: float = 0.0       # fraction sent with the monitor-only bit
+
+
+def emergency_phases(num_slots: int, *, scale: int = 1) -> list[Phase]:
+    """The canonical 4-phase emergency storyline (steady -> flash crowd ->
+    link failover -> slot-churn recovery)."""
+    uniform = tuple(1.0 / num_slots for _ in range(num_slots))
+    # flash crowd: traffic collapses onto slot 0 (the triage model)
+    crowd = tuple(0.7 if i == 0 else 0.3 / max(num_slots - 1, 1)
+                  for i in range(num_slots))
+    # recovery: the updated model (slot 1 if present) takes over
+    churn_slot = 1 % num_slots
+    recovery = tuple(0.6 if i == churn_slot else 0.4 / max(num_slots - 1, 1)
+                     for i in range(num_slots))
+    return [
+        Phase("steady", ticks=8, burst=128 * scale, flows=64,
+              slot_mix=uniform),
+        Phase("flash_crowd", ticks=8, burst=512 * scale, flows=8,
+              slot_mix=crowd, monitor_frac=0.1),
+        Phase("link_failover", ticks=8, burst=256 * scale, flows=64,
+              slot_mix=uniform, failed_queues=(0,)),
+        Phase("slot_churn", ticks=8, burst=128 * scale, flows=64,
+              slot_mix=recovery, swap_slot=churn_slot),
+    ]
+
+
+@dataclasses.dataclass
+class ScenarioTrace:
+    phases: list[Phase]
+    bursts: list[list[np.ndarray]]  # bursts[i][t] = (burst, 272) uint32
+    seed: int
+
+    @property
+    def total_packets(self) -> int:
+        return sum(b.shape[0] for ph in self.bursts for b in ph)
+
+
+def _sample_slots(rng, mix: tuple[float, ...], n: int) -> np.ndarray:
+    p = np.asarray(mix, np.float64)
+    return rng.choice(len(p), size=n, p=p / p.sum())
+
+
+def render(
+    phases: list[Phase],
+    *,
+    num_slots: int,
+    seed: int = 0,
+    payload_pool: np.ndarray | None = None,
+) -> ScenarioTrace:
+    """Expand phases into per-tick packet bursts (deterministic in seed).
+
+    ``payload_pool`` (N, 256) uint32 reuses real payloads round-robin per
+    flow; default is random payloads drawn per flow so a flow's packets
+    are self-similar (same flow tuple, correlated payloads).
+    """
+    rng = np.random.default_rng(seed)
+    seq = 0
+    bursts: list[list[np.ndarray]] = []
+    for phase in phases:
+        if len(phase.slot_mix) != num_slots:
+            raise ValueError(
+                f"phase {phase.name!r}: slot_mix has {len(phase.slot_mix)} "
+                f"entries for {num_slots} slots")
+        flow_words = rng.integers(
+            0, 2**32, (phase.flows, rss.FLOW_WORDS), dtype=np.uint32)
+        if payload_pool is None:
+            flow_payload = rng.integers(
+                0, 2**32, (phase.flows, pkt.PAYLOAD_WORDS), dtype=np.uint32)
+        else:
+            flow_payload = payload_pool[
+                rng.integers(0, payload_pool.shape[0], phase.flows)]
+        phase_bursts = []
+        for _ in range(phase.ticks):
+            fidx = rng.integers(0, phase.flows, phase.burst)
+            slots = _sample_slots(rng, phase.slot_mix, phase.burst)
+            # payload: the flow's base payload with a per-packet twist so
+            # verdicts are not constant within a flow
+            payload = flow_payload[fidx].copy()
+            payload[:, 0] ^= rng.integers(
+                0, 2**32, phase.burst, dtype=np.uint32)
+            control = np.where(
+                rng.random(phase.burst) < phase.monitor_frac,
+                int(pkt.CTRL_MONITOR_ONLY), 0)
+            rows = pkt.make_packets(slots, payload)
+            rows[:, pkt.CONTROL_WORD_LO] = control.astype(np.uint32)
+            rows[:, rss.FLOW_WORD_LO : rss.FLOW_WORD_LO + rss.FLOW_WORDS] = \
+                flow_words[fidx]
+            rows[:, SEQ_WORD] = np.arange(seq, seq + phase.burst,
+                                          dtype=np.uint32)
+            seq += phase.burst
+            phase_bursts.append(rows)
+        bursts.append(phase_bursts)
+    return ScenarioTrace(phases=phases, bursts=bursts, seed=seed)
+
+
+def default_swap_delivery(slot: int, cfg=executor.H32):
+    """Freshly 'delivered' replacement weights for ``slot`` (deterministic)."""
+    return executor.init_params(jax.random.PRNGKey(10_000 + slot), cfg)
+
+
+def play(
+    runtime,
+    trace: ScenarioTrace,
+    *,
+    swap_delivery=default_swap_delivery,
+) -> list[dict]:
+    """Drive a runtime through a rendered trace; per-phase reports.
+
+    Phase-entry events: ``failed_queues`` rewrites the RETA (link
+    failover), ``swap_slot`` installs delivered weights into the resident
+    bank while traffic is in flight.  Each burst is dispatched then
+    ticked once; the backlog drains inside the phase so phase reports are
+    self-contained.
+    """
+    reports = []
+    for phase, phase_bursts in zip(trace.phases, trace.bursts):
+        failed = tuple(q for q in phase.failed_queues
+                       if q < runtime.num_queues)
+        # a failover that would leave zero live queues is unservable —
+        # traffic stays where it is (the 1-queue degenerate case)
+        if failed and set(failed) != set(range(runtime.num_queues)):
+            runtime.fail_queues(failed)
+        else:
+            runtime.reset_reta()
+        if phase.swap_slot is not None:
+            runtime.swap_slot(phase.swap_slot, swap_delivery(phase.swap_slot))
+        before = runtime.audit_conservation()["totals"]
+        wrong0 = runtime.telemetry.wrong_verdict
+        t0 = time.perf_counter()
+        for burst in phase_bursts:
+            runtime.dispatch(burst)
+            runtime.tick()
+        runtime.drain()
+        dt = time.perf_counter() - t0
+        after = runtime.audit_conservation()["totals"]
+        completed = after["completed"] - before["completed"]
+        reports.append({
+            "phase": phase.name,
+            "offered": after["offered"] - before["offered"],
+            "completed": completed,
+            "dropped": after["dropped"] - before["dropped"],
+            "wrong_verdict": runtime.telemetry.wrong_verdict - wrong0,
+            "elapsed_s": dt,
+            "kpps": completed / dt / 1e3 if dt > 0 else float("nan"),
+        })
+    return reports

@@ -1,0 +1,111 @@
+"""Per-queue data-plane telemetry: pps, drops, verdicts, latency histograms.
+
+Counters mirror what a production data plane exports per hardware queue
+(think ethtool -S / XDP stats): packets completed, drops at the ring edge,
+per-slot verdict counts (how much traffic each resident model served and
+how much of it was judged malicious), Pi action counts, and a log2 latency
+histogram measured enqueue -> retire.  ``snapshot()`` freezes everything
+into plain dicts per tick so benchmarks and the CLI can stream or diff
+them without touching live state.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import packet as pkt
+
+# log2 latency bucket edges in microseconds: [1us .. ~134s] + overflow.
+LATENCY_EDGES_US = np.concatenate(
+    [[0.0], 2.0 ** np.arange(0, 28), [np.inf]])
+
+
+class QueueTelemetry:
+    """Telemetry for one queue; updated once per processed tick."""
+
+    def __init__(self, queue: int, num_slots: int):
+        self.queue = queue
+        self.ticks = 0
+        self.completed = 0
+        self.busy_s = 0.0
+        self.per_slot_total = np.zeros(num_slots, np.int64)
+        self.per_slot_malicious = np.zeros(num_slots, np.int64)
+        self.actions = np.zeros(3, np.int64)  # forward / drop / flag
+        self.latency_hist = np.zeros(len(LATENCY_EDGES_US) - 1, np.int64)
+        self.latency_sum_us = 0.0
+        self.latency_max_us = 0.0
+
+    def record(self, slots, verdicts, actions, latency_us, tick_s: float) -> None:
+        slots = np.asarray(slots)
+        verdicts = np.asarray(verdicts, bool)
+        actions = np.asarray(actions)
+        latency_us = np.asarray(latency_us, np.float64)
+        self.ticks += 1
+        self.completed += len(slots)
+        self.busy_s += tick_s
+        np.add.at(self.per_slot_total, slots, 1)
+        np.add.at(self.per_slot_malicious, slots[verdicts], 1)
+        for a in (pkt.ACTION_FORWARD, pkt.ACTION_DROP, pkt.ACTION_FLAG):
+            self.actions[a] += int((actions == a).sum())
+        if latency_us.size:
+            self.latency_hist += np.histogram(latency_us, LATENCY_EDGES_US)[0]
+            self.latency_sum_us += float(latency_us.sum())
+            self.latency_max_us = max(self.latency_max_us, float(latency_us.max()))
+
+    def latency_quantile_us(self, q: float) -> float:
+        """Histogram-resolution quantile (upper bucket edge)."""
+        total = int(self.latency_hist.sum())
+        if not total:
+            return float("nan")
+        cum = np.cumsum(self.latency_hist)
+        b = int(np.searchsorted(cum, q * total))
+        return float(LATENCY_EDGES_US[min(b + 1, len(LATENCY_EDGES_US) - 1)])
+
+    def snapshot(self) -> dict:
+        mean_lat = self.latency_sum_us / self.completed if self.completed else float("nan")
+        return {
+            "queue": self.queue,
+            "ticks": self.ticks,
+            "completed": self.completed,
+            "busy_s": self.busy_s,
+            "pps_busy": self.completed / self.busy_s if self.busy_s else 0.0,
+            "per_slot_total": self.per_slot_total.tolist(),
+            "per_slot_malicious": self.per_slot_malicious.tolist(),
+            "actions": {
+                "forward": int(self.actions[pkt.ACTION_FORWARD]),
+                "drop": int(self.actions[pkt.ACTION_DROP]),
+                "flag": int(self.actions[pkt.ACTION_FLAG]),
+            },
+            "latency_mean_us": mean_lat,
+            "latency_p50_us": self.latency_quantile_us(0.50),
+            "latency_p99_us": self.latency_quantile_us(0.99),
+            "latency_max_us": self.latency_max_us,
+        }
+
+
+class Telemetry:
+    """All-queue telemetry plus runtime-level event counters."""
+
+    def __init__(self, num_queues: int, num_slots: int):
+        self.queues = [QueueTelemetry(q, num_slots) for q in range(num_queues)]
+        self.slot_swaps = 0
+        self.reta_updates = 0
+        self.wrong_verdict = 0  # audit-mode mismatches vs the exact path
+
+    def record_tick(self, queue: int, slots, verdicts, actions,
+                    latency_us, tick_s: float) -> None:
+        self.queues[queue].record(slots, verdicts, actions, latency_us, tick_s)
+
+    def snapshot(self, *, elapsed_s: float | None = None) -> dict:
+        qs = [q.snapshot() for q in self.queues]
+        total = sum(q["completed"] for q in qs)
+        out = {
+            "queues": qs,
+            "completed_total": total,
+            "slot_swaps": self.slot_swaps,
+            "reta_updates": self.reta_updates,
+            "wrong_verdict": self.wrong_verdict,
+        }
+        if elapsed_s:
+            out["aggregate_pps"] = total / elapsed_s
+        return out

@@ -4,6 +4,10 @@ Trains the two slot models (recall / precision oriented) on the synthetic
 IoT-23-like workload, preloads them into the resident bank, and replays a
 boundary stream through the shared forwarding pipeline — reporting the
 paper's headline metrics (throughput, selection cost, continuity).
+
+The default strategy is ``fused`` — the one-launch Pallas megakernel is
+the hot path (PR 1); the exact per-row ``take`` baseline stays reachable
+via ``--strategy take``.
 """
 
 from __future__ import annotations
@@ -28,9 +32,11 @@ def main():
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--samples-per-group", type=int, default=1024)
     ap.add_argument("--batch", type=int, default=256)
-    ap.add_argument("--strategy", default="take",
+    ap.add_argument("--strategy", default="fused",
                     choices=["take", "onehot", "grouped", "grouped_staged",
-                             "fused"])
+                             "fused"],
+                    help="fused (default) runs the one-launch megakernel "
+                         "hot path; take is the exact per-row baseline")
     ap.add_argument("--stream", action="store_true",
                     help="streaming replay: async dispatch with a bounded "
                          "in-flight window instead of per-batch blocking")
