@@ -101,3 +101,36 @@ def jaxpr_stats(fn, *args, payload_threshold: int = 0) -> dict:
     counts = {"kernel_launches": 0, "payload_roundtrip_bytes": 0}
     walk_jaxpr(jaxpr.jaxpr, counts, payload_threshold)
     return counts
+
+
+def standalone_json_main(main_fn, description, argv=None):
+    """Shared ``--json PATH`` standalone entry for per-figure benchmarks.
+
+    Runs ``main_fn`` capturing its ``name,value,derived`` CSV stdout and
+    additionally writes the parsed name -> value map as sorted JSON (the
+    BENCH_<pr>.json convention consumed by ``benchmarks.run --compare``).
+    """
+    import argparse
+    import contextlib
+    import io
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write name -> value JSON "
+                         "(e.g. BENCH_<pr>.json)")
+    args = ap.parse_args(argv)
+    if args.json is None:
+        main_fn()
+        return
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        main_fn()
+    text = buf.getvalue()
+    sys.stdout.write(text)
+    rows = parse_csv_rows(text)
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(rows)} entries to {args.json}", file=sys.stderr)

@@ -19,8 +19,6 @@ map, or through ``python -m benchmarks.run --only fig8``.
 
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import sys
 import time
@@ -34,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, jaxpr_stats, parse_csv_rows
+from benchmarks.common import emit, jaxpr_stats, standalone_json_main
 from repro.core import executor, packet as pkt, pipeline
 from repro.dataplane import (DataplaneRuntime, emergency_phases, play, render)
 
@@ -117,27 +115,5 @@ def main():
     assert aud["wrong_verdict"] == 0, aud
 
 
-def _standalone(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write name -> value JSON (e.g. BENCH_2.json)")
-    args = ap.parse_args(argv)
-    if args.json is None:
-        main()
-        return
-    import contextlib
-    import io
-    buf = io.StringIO()
-    with contextlib.redirect_stdout(buf):
-        main()
-    text = buf.getvalue()
-    sys.stdout.write(text)
-    rows = parse_csv_rows(text)
-    with open(args.json, "w") as f:
-        json.dump(rows, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {len(rows)} entries to {args.json}", file=sys.stderr)
-
-
 if __name__ == "__main__":
-    _standalone()
+    standalone_json_main(main, __doc__)

@@ -1,0 +1,166 @@
+"""Fig. 9 (repo extension) — control-plane epochs and adaptive routing.
+
+Three measurements over the epoch-stamped control plane (DESIGN.md §7):
+
+  * **epoch apply latency** — wall-clock cost of applying one epoch of
+    each command kind (SwapSlot / ProgramReta / FailQueues /
+    RestoreQueues / SetPolicy) at a tick boundary, median over trials;
+    the epoch-native successor of ``switching.measure_update_latency_us``;
+  * **adaptive-policy rebalance** — the elephant-flow skew scenario (a
+    few heavy flows hash to one queue) under ``StaticReta`` vs
+    ``LeastDepth`` vs ``DropRateRebalance``: max-queue drop count (the
+    imbalance the policy must fix — asserted to shrink) and the time
+    from skew onset to the last rebalance epoch;
+  * **pipelined ticks** — scenario throughput at pipeline depth 1
+    (synchronous) vs 4 (bounded in-flight window), plus the continuity
+    audit proving zero wrong-verdict packets across a run that exercises
+    every command kind.
+
+Run standalone with ``--json BENCH_3.json`` for the machine-readable
+map, or through ``python -m benchmarks.run --only fig9``.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+import time
+
+if __package__ in (None, ""):  # invoked as `python benchmarks/fig9_control.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(1, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, standalone_json_main
+from repro.control import (DropRateRebalance, FailQueues, LeastDepth,
+                           ProgramReta, RestoreQueues, SetPolicy, StaticReta,
+                           SwapSlot)
+from repro.core import executor
+from repro.dataplane import (DataplaneRuntime, elephant_skew_phases,
+                             emergency_phases, play, render, rss, scenarios)
+
+NUM_SLOTS = 4
+NUM_QUEUES = 4
+BATCH = 128
+
+
+def _fresh_runtime(bank, **kw):
+    kw.setdefault("num_queues", NUM_QUEUES)
+    kw.setdefault("strategy", "fused")
+    kw.setdefault("batch", BATCH)
+    kw.setdefault("ring_capacity", 1024)
+    return DataplaneRuntime(bank, **kw)
+
+
+def _apply_us(rt, cmd, trials: int = 7) -> float:
+    """Median apply cost of one single-command epoch at a tick boundary."""
+    samples = []
+    for _ in range(trials):
+        rt.control.submit(cmd)
+        rt.flush_control()
+        samples.append(rt.control.log[-1].apply_us)
+    return float(statistics.median(samples))
+
+
+def bench_epoch_latency(bank):
+    rt = _fresh_runtime(bank)
+    delivered = scenarios.default_swap_delivery(1)
+    reta = tuple(rss.indirection_table(NUM_QUEUES))
+    kinds = [
+        ("swap_slot", SwapSlot(1, delivered)),
+        ("program_reta", ProgramReta(reta)),
+        ("fail_queues", FailQueues((0,))),
+        ("restore_queues", RestoreQueues()),
+        ("set_policy", SetPolicy(LeastDepth())),
+    ]
+    for name, cmd in kinds:
+        emit(f"fig9.epoch.{name}.apply_us", _apply_us(rt, cmd),
+             "single-command epoch at tick boundary")
+
+
+def bench_policy_rebalance(bank, trace):
+    results = {}
+    for policy in (StaticReta(), LeastDepth(), DropRateRebalance()):
+        rt = _fresh_runtime(bank, ring_capacity=256, batch=64,
+                            policy=policy)
+        t0 = time.perf_counter()
+        reports = play(rt, trace)
+        aud = rt.audit_conservation()
+        assert aud["ok"], aud
+        dropped = [q["dropped"] for q in aud["per_queue"]]
+        rebalances = [r for r in rt.control.log
+                      if any(isinstance(c, ProgramReta) for c in r.commands)]
+        # skew onset = end of the warmup phase (which also absorbed JIT
+        # compile); convergence = last rebalance epoch becoming effective
+        skew_start = t0 + reports[0]["elapsed_s"]
+        rebalance_us = (max(0.0, rebalances[-1].submitted_s - skew_start)
+                        * 1e6 + rebalances[-1].apply_latency_us
+                        if rebalances else 0.0)
+        key = policy.name.replace("-", "_")
+        results[policy.name] = max(dropped)
+        emit(f"fig9.policy.{key}.max_queue_dropped", max(dropped),
+             f"elephant skew, {len(rebalances)} rebalance epoch(s)")
+        emit(f"fig9.policy.{key}.total_dropped", sum(dropped),
+             "all queues")
+        if rebalances:
+            emit(f"fig9.policy.{key}.rebalance_us", rebalance_us,
+                 "skew onset -> last rebalance effective")
+    assert results["least-depth"] < results["static"], results
+    assert results["drop-rate"] < results["static"], results
+
+
+def bench_pipeline_and_continuity(bank):
+    trace = render(emergency_phases(NUM_SLOTS), num_slots=NUM_SLOTS, seed=0)
+    verdicts = {}
+    for depth in (1, 4):
+        best = 0.0
+        for _ in range(2):  # warm best-of-2 (first run pays compile)
+            rt = _fresh_runtime(bank, ring_capacity=8192,
+                                pipeline_depth=depth, record=True)
+            t0 = time.perf_counter()
+            play(rt, trace)
+            dt = time.perf_counter() - t0
+            aud = rt.audit_conservation()
+            assert aud["ok"], aud
+            done = aud["totals"]["completed"]
+            assert done == trace.total_packets, aud
+            best = max(best, done / dt / 1e3)
+        verdicts[depth] = (rt.completed_seq, rt.completed_verdicts,
+                           rt.completed_slots)
+        emit(f"fig9.pipeline.depth{depth}.kpps", best,
+             f"{done} pkts best-of-2")
+    assert verdicts[1] == verdicts[4], "pipelined ticks changed results"
+
+    # continuity across EVERY command kind: the emergency trace covers
+    # RestoreQueues / FailQueues / SwapSlot; a mid-run SetPolicy installs
+    # LeastDepth whose rebalances add ProgramReta epochs.
+    rt = _fresh_runtime(bank, ring_capacity=512, audit=True,
+                        pipeline_depth=2)
+    rt.control.submit(SetPolicy(LeastDepth()))
+    play(rt, trace)
+    cont = rt.control.continuity_audit()
+    kinds = {c for e in cont["epochs"] for c in e["commands"]}
+    assert kinds >= {"restore_queues", "fail_queues", "swap_slot",
+                     "set_policy", "program_reta"}, kinds
+    assert cont["ok"], cont
+    emit("fig9.audit.wrong_verdict_all_commands",
+         cont["wrong_verdict_total"],
+         f"expect=0 across {len(cont['epochs'])} epochs, "
+         f"{len(kinds)} command kinds")
+
+
+def main():
+    bank = executor.init_bank(jax.random.PRNGKey(0), NUM_SLOTS)
+    skew = render(elephant_skew_phases(NUM_SLOTS, NUM_QUEUES),
+                  num_slots=NUM_SLOTS, seed=0, num_queues=NUM_QUEUES)
+    bench_epoch_latency(bank)
+    bench_policy_rebalance(bank, skew)
+    bench_pipeline_and_continuity(bank)
+
+
+if __name__ == "__main__":
+    standalone_json_main(main, __doc__)

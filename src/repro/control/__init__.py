@@ -1,0 +1,17 @@
+"""Versioned control plane for the data-plane runtime (DESIGN.md §7).
+
+``commands`` defines the five typed mutations, ``plane`` batches them
+into atomic, epoch-stamped transactions applied only at tick boundaries
+and keeps the auditable command log, and ``policy`` closes the loop from
+telemetry back to ``ProgramReta`` epochs.
+"""
+
+from repro.control.commands import (  # noqa: F401
+    API_VERSION, Command, FailQueues, ProgramReta, RestoreQueues, SetPolicy,
+    SwapSlot,
+)
+from repro.control.plane import ControlPlane, EpochRecord  # noqa: F401
+from repro.control.policy import (  # noqa: F401
+    POLICIES, DropRateRebalance, LeastDepth, PolicyView, RoutingPolicy,
+    StaticReta, make_policy,
+)

@@ -1,15 +1,17 @@
-"""Multi-queue data-plane runtime (DESIGN.md §6).
+"""Multi-queue data-plane runtime (DESIGN.md §6-§7).
 
 The AF_XDP deployment shape in software: ``rss`` hashes flows to queues,
 ``ring`` buffers each queue with counted tail-drop, ``runtime`` fans the
-fused forwarding program out across queues (loop / vmap / shard_map),
-``telemetry`` exports per-queue counters, and ``scenarios`` generates
-phased emergency traffic to drive it all.
+fused forwarding program out across queues (loop / vmap / shard_map)
+behind an epoch-stamped control plane (`repro.control`), ``telemetry``
+exports per-queue counters, and ``scenarios`` generates phased emergency
+traffic — rendered as command scripts — to drive it all.
 """
 
 from repro.dataplane.ring import PacketRing, RingCounters  # noqa: F401
 from repro.dataplane.runtime import DataplaneRuntime, queue_mesh  # noqa: F401
 from repro.dataplane.scenarios import (  # noqa: F401
-    Phase, ScenarioTrace, emergency_phases, play, render, SEQ_WORD,
+    Phase, ScenarioTrace, elephant_skew_phases, emergency_phases,
+    make_scenario, phase_commands, play, render, SEQ_WORD,
 )
 from repro.dataplane import rss, telemetry  # noqa: F401

@@ -93,14 +93,21 @@ class PacketRing:
     def mark_completed(self, n: int) -> None:
         self.counters.completed += int(n)
 
-    def conservation(self) -> dict:
-        """Counter snapshot + the two ring invariants (see module docstring)."""
+    def conservation(self, *, in_flight: int = 0) -> dict:
+        """Counter snapshot + the two ring invariants (see module docstring).
+
+        ``in_flight`` is rows the consumer has popped but not yet retired
+        (the pipelined runtime's device stage); they extend the consumer
+        invariant to ``admitted == completed + occupancy + in_flight`` so
+        conservation is checkable at any instant, not just when drained.
+        """
         c = self.counters
         return {
             **c.as_dict(),
             "occupancy": self._size,
+            "in_flight": int(in_flight),
             "producer_ok": c.offered == c.admitted + c.dropped,
-            "consumer_ok": c.admitted == c.completed + self._size,
+            "consumer_ok": c.admitted == c.completed + self._size + in_flight,
         }
 
     def ok(self) -> bool:

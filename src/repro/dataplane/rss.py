@@ -127,6 +127,13 @@ def failover_table(
     return reta
 
 
+def bucket_index(h: np.ndarray, reta_len: int) -> np.ndarray:
+    """Hash -> RETA bucket: mask for the hardware-style power-of-two
+    table; modulo keeps every bucket reachable for arbitrary sizes."""
+    size = np.uint32(reta_len)
+    return h & (size - 1) if reta_len & (reta_len - 1) == 0 else h % size
+
+
 def queue_of(
     packets: np.ndarray,
     num_queues: int,
@@ -139,8 +146,4 @@ def queue_of(
         reta = indirection_table(num_queues)
     reta = np.asarray(reta, np.int32)
     h = toeplitz_hash(flow_words_of(packets), key)
-    size = np.uint32(len(reta))
-    # mask for the hardware-style power-of-two table; modulo keeps every
-    # bucket reachable for arbitrary sizes
-    idx = h & (size - 1) if len(reta) & (len(reta) - 1) == 0 else h % size
-    return reta[idx]
+    return reta[bucket_index(h, len(reta))]

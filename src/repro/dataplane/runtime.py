@@ -7,6 +7,16 @@ resident-bank forwarding program (`repro.core.pipeline.packet_step`) —
 one fused launch per queue-block, per-queue FIFO ordering, and online
 slot swaps that never produce a wrong verdict.
 
+Control plane (DESIGN.md §7): every runtime mutation — slot swap, RETA
+rewrite, queue fail/restore, policy change — flows through
+``self.control`` (`repro.control.ControlPlane`) as an epoch-stamped
+command batch.  Epochs apply only at tick boundaries (entry of
+``dispatch``/``tick``), so in-flight device work keeps the bank/RETA
+version it was dispatched with; the legacy ``swap_slot``/``set_reta``/
+``fail_queues`` methods are deprecation shims that emit single-command
+epochs.  An installed ``RoutingPolicy`` is consulted at every tick
+boundary and its rebalances land as ordinary ``ProgramReta`` epochs.
+
 Fan-out modes (``fanout=``):
 
 * ``loop``      — one jitted ``packet_step`` call per non-empty queue per
@@ -22,19 +32,25 @@ Fan-out modes (``fanout=``):
                   Host-simulated on 1-device CPU CI; real spread on TPU.
 * ``auto``      — ``loop`` for fused/grouped strategies, ``vmap`` else.
 
-Every tick pops at most ``batch`` rows per queue, pads to the static batch
-shape (no recompiles), runs the workers, then retires rows against the
-ring counters so ``admitted == completed + occupancy`` holds at any
-instant.  ``audit=True`` re-scores every tick through the exact ``take``
-path and counts verdict mismatches — the multi-queue extension of the
-``replay_trace`` zero-wrong-verdict regression, valid across online
-``swap_slot`` updates because both paths read the same bank version.
+The tick loop is a 3-stage pipeline (dispatch / device / retire) with a
+bounded in-flight window of ``pipeline_depth`` ticks, the multi-queue
+form of ``switching.replay_trace(stream=True)``: each ``tick()`` pops at
+most ``batch`` rows per queue, pads to the static batch shape (no
+recompiles), issues the workers asynchronously, and retires the oldest
+tick once the window is full.  ``pipeline_depth=1`` degenerates to the
+synchronous loop; any depth produces bit-identical verdicts because
+every tick captures the bank/RETA version current at its dispatch.
+``audit=True`` re-scores every tick through the exact ``take`` path
+*against that captured bank* and counts verdict mismatches — valid
+across every control command kind, not just slot swaps.
 """
 
 from __future__ import annotations
 
+import collections
 import math
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +58,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.control import (ControlPlane, FailQueues, ProgramReta,
+                           RestoreQueues, SetPolicy, SwapSlot)
+from repro.control import policy as policy_mod
 from repro.core import bank as bank_lib, pipeline
 from repro.dataplane import rss
 from repro.dataplane.ring import PacketRing
@@ -50,6 +69,9 @@ from repro.dataplane.telemetry import Telemetry
 from repro.launch import mesh as mesh_lib
 
 _LOOP_STRATEGIES = ("fused", "grouped", "grouped_staged")
+
+_DEPRECATION = ("%s() is a deprecation shim: submit a %s command through "
+                "runtime.control.submit(...) instead")
 
 
 def queue_mesh(num_queues: int):
@@ -64,6 +86,20 @@ def queue_mesh(num_queues: int):
         return m, "data"
     d = math.gcd(num_queues, jax.device_count())
     return jax.make_mesh((d,), ("queues",)), "queues"
+
+
+class _InFlight:
+    """One dispatched-but-unretired tick (the device stage of the pipeline)."""
+
+    __slots__ = ("tick", "popped", "counts", "results", "bank", "t0")
+
+    def __init__(self, tick, popped, counts, results, bank, t0):
+        self.tick = tick
+        self.popped = popped      # [(rows, ts)] per queue
+        self.counts = counts      # rows popped per queue
+        self.results = results    # {queue: PacketResult} (async)
+        self.bank = bank          # bank version captured at dispatch
+        self.t0 = t0
 
 
 class DataplaneRuntime:
@@ -82,6 +118,8 @@ class DataplaneRuntime:
         rss_key: bytes = rss.DEFAULT_KEY,
         audit: bool = False,
         record: bool = False,
+        pipeline_depth: int = 1,
+        policy=None,
     ):
         self.bank = bank
         self.num_queues = int(num_queues)
@@ -102,6 +140,16 @@ class DataplaneRuntime:
         self.completed_slots = [[] for _ in range(self.num_queues)]
         self.dropped_seq: list[int] = []
         self._t_start: float | None = None
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self.pipeline_depth = int(pipeline_depth)
+        self._inflight: collections.deque[_InFlight] = collections.deque()
+        self._last_retire_s: float | None = None
+        self._tick_count = 0
+        self.control = ControlPlane(self)
+        self.policy = policy          # initial config, not a mutation
+        self.failed_queues: set[int] = set()
+        self.bucket_load = np.zeros(len(self.reta), np.int64)
         if fanout == "auto":
             fanout = "loop" if strategy in _LOOP_STRATEGIES else "vmap"
         if fanout not in ("loop", "vmap", "shard_map"):
@@ -130,39 +178,182 @@ class DataplaneRuntime:
             in_specs=(P(), P(axis)), out_specs=P(axis), check_rep=False,
         ))
 
-    # -- control plane ------------------------------------------------------
+    # -- control plane: command application (ControlPlane-only entry) -------
 
-    def swap_slot(self, k: int, params) -> None:
-        """Online resident-slot replacement: the bank array is updated
-        between ticks; in-flight rows of other slots are unaffected."""
-        self.bank = bank_lib.update_slot(self.bank, k, params)
-        self.telemetry.slot_swaps += 1
+    def _validate_command(self, cmd) -> None:
+        """Raise without mutating when ``cmd`` cannot apply to the current
+        state.  ``ControlPlane.apply_pending`` validates a whole epoch
+        before applying any of it, so a rejected epoch is atomic: nothing
+        mutates.  (Validation is against the pre-epoch state; an epoch
+        whose commands only conflict with *each other* still fails at
+        apply time and is logged with its error.)"""
+        if isinstance(cmd, SwapSlot):
+            if not 0 <= int(cmd.slot) < self.num_slots:
+                raise ValueError(f"slot {cmd.slot} out of range")
+            if (jax.tree_util.tree_structure(cmd.params)
+                    != jax.tree_util.tree_structure(self.bank)):
+                raise ValueError("params pytree does not match bank slots")
+        elif isinstance(cmd, ProgramReta):
+            reta = np.asarray(cmd.reta, np.int32)
+            if reta.size == 0:
+                raise ValueError("empty RETA")
+            if reta.min() < 0 or reta.max() >= self.num_queues:
+                raise ValueError("RETA entry out of queue range")
+        elif isinstance(cmd, FailQueues):
+            if any(not 0 <= q < self.num_queues for q in cmd.queues):
+                raise ValueError("failed queue id out of range")
+            # NOTE: no zero-live-queues check here — it would judge each
+            # command against the pre-epoch state and falsely reject
+            # sequentially-valid epochs like [RestoreQueues, FailQueues];
+            # the apply-time failover_table raises instead and the state
+            # snapshot rolls the epoch back atomically.
+        elif isinstance(cmd, RestoreQueues):
+            if any(not 0 <= q < self.num_queues for q in cmd.queues):
+                raise ValueError("restored queue id out of range")
+        elif isinstance(cmd, SetPolicy):
+            if cmd.policy is not None and not hasattr(cmd.policy, "propose"):
+                raise TypeError("policy must implement propose(view)")
+        else:
+            raise TypeError(f"not a control command: {cmd!r}")
 
-    def set_reta(self, reta: np.ndarray) -> None:
+    def _apply_command(self, cmd) -> None:
+        """Apply ONE control command.  Only ``ControlPlane.apply_pending``
+        may call this — it is the single mutation funnel."""
+        if isinstance(cmd, SwapSlot):
+            self.bank = bank_lib.update_slot(self.bank, cmd.slot, cmd.params)
+            self.telemetry.slot_swaps += 1
+        elif isinstance(cmd, ProgramReta):
+            self._install_reta(np.asarray(cmd.reta, np.int32))
+        elif isinstance(cmd, FailQueues):
+            failed = self.failed_queues | set(cmd.queues)
+            # compute-then-commit: an unservable failover (zero live
+            # queues) raises here without mutating any runtime state
+            table = rss.failover_table(self.reta, tuple(sorted(failed)),
+                                       num_queues=self.num_queues)
+            self.failed_queues = failed
+            self._install_reta(table)
+        elif isinstance(cmd, RestoreQueues):
+            self.failed_queues -= set(cmd.queues or range(self.num_queues))
+            base = rss.indirection_table(self.num_queues, len(self.reta))
+            if self.failed_queues:
+                base = rss.failover_table(
+                    base, tuple(sorted(self.failed_queues)),
+                    num_queues=self.num_queues)
+            self._install_reta(base)
+        elif isinstance(cmd, SetPolicy):
+            self.policy = cmd.policy
+        else:
+            raise TypeError(f"not a control command: {cmd!r}")
+
+    def _control_state(self) -> dict:
+        """Snapshot everything epochs mutate (apply-time rollback).  Safe
+        by reference: appliers install fresh objects, never mutate these."""
+        return dict(bank=self.bank, reta=self.reta,
+                    failed=set(self.failed_queues), policy=self.policy,
+                    bucket_load=self.bucket_load,
+                    slot_swaps=self.telemetry.slot_swaps,
+                    reta_updates=self.telemetry.reta_updates)
+
+    def _rollback_control_state(self, s: dict) -> None:
+        self.bank = s["bank"]
+        self.reta = s["reta"]
+        self.failed_queues = s["failed"]
+        self.policy = s["policy"]
+        self.bucket_load = s["bucket_load"]
+        self.telemetry.slot_swaps = s["slot_swaps"]
+        self.telemetry.reta_updates = s["reta_updates"]
+
+    def _install_reta(self, reta: np.ndarray) -> None:
         reta = np.asarray(reta, np.int32)
         if reta.min() < 0 or reta.max() >= self.num_queues:
             raise ValueError("RETA entry out of queue range")
+        if len(reta) != len(self.bucket_load):
+            self.bucket_load = np.zeros(len(reta), np.int64)
         self.reta = reta
         self.telemetry.reta_updates += 1
 
+    def _apply_control(self) -> None:
+        """Apply queued epochs at a *fully quiescent* boundary: in-flight
+        ticks retire first, so the wrong-verdict counter each epoch
+        snapshots has absorbed every pre-epoch tick and per-epoch
+        continuity attribution is exact even at pipeline_depth > 1."""
+        if self.control.has_pending:
+            self.retire_all()
+            self.control.apply_pending(self._tick_count)
+
+    def _tick_boundary(self) -> None:
+        """Quiescent point between ticks: apply queued control epochs,
+        then let the routing policy react to current telemetry (its
+        proposal lands as an epoch at the *next* boundary)."""
+        self._apply_control()
+        if self.policy is not None:
+            view = policy_mod.PolicyView(
+                tick=self._tick_count,
+                num_queues=self.num_queues,
+                reta=self.reta.copy(),
+                queue_depth=np.array([len(r) for r in self.rings], np.int64),
+                queue_dropped=np.array(
+                    [r.counters.dropped for r in self.rings], np.int64),
+                bucket_load=self.bucket_load.copy(),
+                failed_queues=frozenset(self.failed_queues),
+            )
+            proposal = self.policy.propose(view)
+            if proposal is not None and not np.array_equal(proposal, self.reta):
+                self.control.submit(ProgramReta(tuple(proposal)))
+
+    def flush_control(self) -> None:
+        """Force-apply pending epochs now (we are between ticks by
+        construction when host code runs)."""
+        self._apply_control()
+
+    # -- deprecated direct-mutation shims ------------------------------------
+
+    def swap_slot(self, k: int, params) -> None:
+        """Deprecated: emits a single-command ``SwapSlot`` epoch."""
+        warnings.warn(_DEPRECATION % ("swap_slot", "SwapSlot"),
+                      DeprecationWarning, stacklevel=2)
+        self.control.submit(SwapSlot(int(k), params))
+        self.flush_control()
+
+    def set_reta(self, reta: np.ndarray) -> None:
+        """Deprecated: emits a single-command ``ProgramReta`` epoch."""
+        warnings.warn(_DEPRECATION % ("set_reta", "ProgramReta"),
+                      DeprecationWarning, stacklevel=2)
+        self.control.submit(ProgramReta(tuple(np.asarray(reta, np.int32))))
+        self.flush_control()
+
     def fail_queues(self, failed: tuple[int, ...]) -> None:
-        self.set_reta(rss.failover_table(
-            self.reta, failed, num_queues=self.num_queues))
+        """Deprecated: emits a single-command ``FailQueues`` epoch."""
+        warnings.warn(_DEPRECATION % ("fail_queues", "FailQueues"),
+                      DeprecationWarning, stacklevel=2)
+        self.control.submit(FailQueues(tuple(failed)))
+        self.flush_control()
 
     def reset_reta(self) -> None:
-        self.set_reta(rss.indirection_table(self.num_queues))
+        """Deprecated: emits a single-command ``RestoreQueues`` epoch."""
+        warnings.warn(_DEPRECATION % ("reset_reta", "RestoreQueues"),
+                      DeprecationWarning, stacklevel=2)
+        self.control.submit(RestoreQueues())
+        self.flush_control()
 
     # -- data plane ---------------------------------------------------------
 
     def dispatch(self, packets_np: np.ndarray, now: float | None = None) -> dict:
-        """RSS-dispatch one arrival burst into the per-queue rings."""
+        """RSS-dispatch one arrival burst into the per-queue rings.
+
+        The arrival edge is a tick boundary: queued control epochs (RETA
+        rewrites in particular) become effective before routing.
+        """
+        self._apply_control()
         if self._t_start is None:
             self._t_start = time.perf_counter()
         if now is None:
             now = time.perf_counter()
         packets_np = np.asarray(packets_np)
-        q = rss.queue_of(packets_np, self.num_queues,
-                         key=self.rss_key, reta=self.reta)
+        h = rss.toeplitz_hash(rss.flow_words_of(packets_np), self.rss_key)
+        bucket = rss.bucket_index(h, len(self.reta)).astype(np.int64)
+        self.bucket_load += np.bincount(bucket, minlength=len(self.reta))
+        q = self.reta[bucket]
         per_queue = []
         for i, ring in enumerate(self.rings):
             rows = packets_np[q == i]
@@ -187,7 +378,11 @@ class DataplaneRuntime:
         return out
 
     def tick(self) -> int:
-        """Drain up to ``batch`` rows per queue through the workers."""
+        """Pipeline stage 1 (dispatch): pop up to ``batch`` rows per queue
+        and issue the workers asynchronously; stage 3 (retire) runs for
+        the oldest tick once more than ``pipeline_depth`` are in flight."""
+        self._tick_boundary()
+        self._tick_count += 1
         popped = [ring.pop(self.batch) for ring in self.rings]
         counts = [rows.shape[0] for rows, _ in popped]
         total = sum(counts)
@@ -202,21 +397,36 @@ class DataplaneRuntime:
                 results[q] = pipeline.packet_step(
                     self.bank, jnp.asarray(self._pad(rows)),
                     **self._step_kwargs())
-            for res in results.values():
-                res.scores.block_until_ready()
         else:
             qstack = np.stack([self._pad(rows) for rows, _ in popped])
             res_all = self._vstep(self.bank, jnp.asarray(qstack))
-            res_all.scores.block_until_ready()
             results = {
                 q: pipeline.PacketResult(*(leaf[q] for leaf in res_all))
                 for q in range(self.num_queues) if counts[q]
             }
+        self._inflight.append(_InFlight(
+            self._tick_count, popped, counts, results, self.bank, t0))
+        while len(self._inflight) > self.pipeline_depth - 1:
+            self._retire(self._inflight.popleft())
+        return total
+
+    def _retire(self, rec: _InFlight) -> None:
+        """Pipeline stage 3: block on the tick's device work, then fold
+        results into telemetry / audit / record and retire ring rows."""
+        total = sum(rec.counts)
+        for res in rec.results.values():
+            res.scores.block_until_ready()
         now = time.perf_counter()
-        tick_s = now - t0
-        for q, res in results.items():
-            n = counts[q]
-            rows, ts = popped[q]
+        # busy time must not double-count overlapping in-flight windows:
+        # charge this tick only for the span since the previous retire
+        # (identical to dispatch->retire when the pipeline is synchronous)
+        start = (rec.t0 if self._last_retire_s is None
+                 else max(rec.t0, self._last_retire_s))
+        tick_s = now - start
+        self._last_retire_s = now
+        for q, res in rec.results.items():
+            n = rec.counts[q]
+            rows, ts = rec.popped[q]
             slots = np.asarray(res.slots)[:n]
             verdicts = np.asarray(res.verdicts)[:n]
             actions = np.asarray(res.actions)[:n]
@@ -227,8 +437,10 @@ class DataplaneRuntime:
             )
             self.rings[q].mark_completed(n)
             if self.audit:
+                # audit against the bank version this tick was dispatched
+                # with — a later epoch must not invalidate earlier work
                 exact = pipeline.packet_step(
-                    self.bank, jnp.asarray(self._pad(rows)),
+                    rec.bank, jnp.asarray(self._pad(rows)),
                     num_slots=self.num_slots, strategy="take",
                     backend=self.backend)
                 bad = (np.asarray(exact.verdicts)[:n] != verdicts).sum()
@@ -238,7 +450,19 @@ class DataplaneRuntime:
                 self.completed_seq[q].extend(int(s) for s in rows[:, SEQ_WORD])
                 self.completed_verdicts[q].extend(bool(v) for v in verdicts)
                 self.completed_slots[q].extend(int(s) for s in slots)
-        return total
+
+    def retire_all(self) -> None:
+        """Flush the pipeline: retire every in-flight tick (oldest first)."""
+        while self._inflight:
+            self._retire(self._inflight.popleft())
+
+    def in_flight_rows(self) -> list[int]:
+        """Rows popped but not yet retired, per queue."""
+        out = [0] * self.num_queues
+        for rec in self._inflight:
+            for q, n in enumerate(rec.counts):
+                out[q] += n
+        return out
 
     def drain(self, max_ticks: int = 100_000) -> int:
         done = 0
@@ -246,17 +470,22 @@ class DataplaneRuntime:
             n = self.tick()
             done += n
             if n == 0 and not any(len(r) for r in self.rings):
+                self.retire_all()
                 return done
         raise RuntimeError("drain did not converge")
 
     # -- audit + reporting --------------------------------------------------
 
     def audit_conservation(self) -> dict:
-        """Per-queue + aggregate packet conservation; must always hold."""
-        per_queue = [ring.conservation() for ring in self.rings]
+        """Per-queue + aggregate packet conservation; must always hold —
+        including mid-pipeline, where popped-but-unretired rows are
+        accounted as ``in_flight``."""
+        inflight = self.in_flight_rows()
+        per_queue = [ring.conservation(in_flight=inflight[q])
+                     for q, ring in enumerate(self.rings)]
         totals = {k: sum(c[k] for c in per_queue)
                   for k in ("offered", "admitted", "dropped", "completed",
-                            "occupancy")}
+                            "occupancy", "in_flight")}
         ok = all(c["producer_ok"] and c["consumer_ok"] for c in per_queue)
         return {"per_queue": per_queue, "totals": totals, "ok": ok,
                 "wrong_verdict": self.telemetry.wrong_verdict}
@@ -268,4 +497,7 @@ class DataplaneRuntime:
         out["conservation"] = self.audit_conservation()
         out["fanout"] = self.fanout
         out["strategy"] = self.strategy
+        out["pipeline_depth"] = self.pipeline_depth
+        out["policy"] = getattr(self.policy, "name", None)
+        out["control"] = self.control.stats()
         return out

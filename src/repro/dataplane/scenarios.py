@@ -16,9 +16,12 @@ deterministic, replayable traces:
   carries its flow tuple in reg0 words 4..7 (RSS input) and a globally
   monotonic sequence stamp in word 15, so conservation and per-queue
   ordering are checkable after the fact;
+* ``phase_commands`` renders a phase's entry events (failover, restore,
+  slot swap) as a typed control-plane command script — one atomic epoch;
 * ``play`` drives a ``DataplaneRuntime`` through a rendered trace,
-  applying failovers/swaps at phase boundaries and returning per-phase
-  reports (completed, dropped, wrong verdicts, throughput).
+  submitting each phase's command script through ``runtime.control`` and
+  returning per-phase reports (completed, dropped, wrong verdicts,
+  throughput).
 
 Same phases + same seed -> byte-identical trace, always.
 """
@@ -31,6 +34,7 @@ import time
 import jax
 import numpy as np
 
+from repro.control import FailQueues, RestoreQueues, SwapSlot
 from repro.core import executor, packet as pkt
 from repro.dataplane import rss
 
@@ -48,6 +52,13 @@ class Phase:
     failed_queues: tuple[int, ...] = ()   # queues that die at phase entry
     swap_slot: int | None = None    # resident slot replaced at phase entry
     monitor_frac: float = 0.0       # fraction sent with the monitor-only bit
+    # elephant-flow skew: the first ``elephant_flows`` flows are forced
+    # (by rejection-sampling their flow tuples against the default RETA)
+    # to hash onto ``elephant_queue`` and carry ``elephant_frac`` of the
+    # phase's packets — a few heavy flows crushing one queue.
+    elephant_flows: int = 0
+    elephant_queue: int | None = None
+    elephant_frac: float = 0.0
 
 
 def emergency_phases(num_slots: int, *, scale: int = 1) -> list[Phase]:
@@ -73,6 +84,43 @@ def emergency_phases(num_slots: int, *, scale: int = 1) -> list[Phase]:
     ]
 
 
+def elephant_skew_phases(
+    num_slots: int,
+    num_queues: int,
+    *,
+    scale: int = 1,
+    ticks: int = 12,
+    elephant_queue: int = 0,
+) -> list[Phase]:
+    """Elephant-flow skew: a few heavy flows all hash to one queue.
+
+    A short uniform warmup, then a sustained phase where 4 elephant
+    flows (rejection-sampled to land on ``elephant_queue`` under the
+    default RETA) carry ~85% of a burst sized well above one queue's
+    drain rate — the canonical imbalance a static RETA cannot fix and an
+    adaptive policy must.  Used by the policy tests and fig9.
+    """
+    uniform = tuple(1.0 / num_slots for _ in range(num_slots))
+    return [
+        Phase("warmup", ticks=2, burst=64 * scale, flows=32,
+              slot_mix=uniform),
+        Phase("skew", ticks=ticks, burst=256 * scale, flows=32,
+              slot_mix=uniform, elephant_flows=4,
+              elephant_queue=elephant_queue, elephant_frac=0.85),
+    ]
+
+
+def make_scenario(name: str, *, num_slots: int, num_queues: int,
+                  scale: int = 1) -> list[Phase]:
+    """CLI registry: scenario name -> phase list."""
+    if name == "emergency":
+        return emergency_phases(num_slots, scale=scale)
+    if name == "elephant-skew":
+        return elephant_skew_phases(num_slots, num_queues, scale=scale)
+    raise ValueError(f"unknown scenario {name!r} "
+                     "(known: ['emergency', 'elephant-skew'])")
+
+
 @dataclasses.dataclass
 class ScenarioTrace:
     phases: list[Phase]
@@ -89,12 +137,40 @@ def _sample_slots(rng, mix: tuple[float, ...], n: int) -> np.ndarray:
     return rng.choice(len(p), size=n, p=p / p.sum())
 
 
+def _elephant_flow_words(rng, n: int, num_queues: int, queue: int) -> np.ndarray:
+    """Rejection-sample ``n`` flow tuples that hash to ``queue`` under the
+    default RETA (deterministic in the rng state)."""
+    reta = rss.indirection_table(num_queues)
+    out = np.empty((n, rss.FLOW_WORDS), np.uint32)
+    filled = 0
+    while filled < n:
+        cand = rng.integers(0, 2**32,
+                            (64 * num_queues, rss.FLOW_WORDS), dtype=np.uint32)
+        h = rss.toeplitz_hash(cand)
+        hits = cand[reta[rss.bucket_index(h, len(reta))] == queue]
+        take = min(hits.shape[0], n - filled)
+        out[filled : filled + take] = hits[:take]
+        filled += take
+    return out
+
+
+def _sample_flows(rng, phase: Phase) -> np.ndarray:
+    """Per-packet flow index; elephants carry ``elephant_frac`` of them."""
+    if not phase.elephant_flows or phase.elephant_frac <= 0:
+        return rng.integers(0, phase.flows, phase.burst)
+    heavy = rng.random(phase.burst) < phase.elephant_frac
+    elephants = rng.integers(0, phase.elephant_flows, phase.burst)
+    mice = rng.integers(phase.elephant_flows, phase.flows, phase.burst)
+    return np.where(heavy, elephants, mice)
+
+
 def render(
     phases: list[Phase],
     *,
     num_slots: int,
     seed: int = 0,
     payload_pool: np.ndarray | None = None,
+    num_queues: int | None = None,
 ) -> ScenarioTrace:
     """Expand phases into per-tick packet bursts (deterministic in seed).
 
@@ -112,6 +188,23 @@ def render(
                 f"entries for {num_slots} slots")
         flow_words = rng.integers(
             0, 2**32, (phase.flows, rss.FLOW_WORDS), dtype=np.uint32)
+        if phase.elephant_flows and phase.elephant_queue is not None:
+            if num_queues is None:
+                raise ValueError(
+                    f"phase {phase.name!r} pins elephant flows to a queue; "
+                    "render(..., num_queues=...) is required")
+            if not 0 <= phase.elephant_queue < num_queues:
+                raise ValueError(
+                    f"phase {phase.name!r}: elephant_queue "
+                    f"{phase.elephant_queue} out of range for "
+                    f"{num_queues} queues")  # rejection sampling would spin
+            if phase.elephant_flows >= phase.flows:
+                raise ValueError(
+                    f"phase {phase.name!r}: needs elephant_flows "
+                    f"({phase.elephant_flows}) < flows ({phase.flows}) "
+                    "so mice flows exist")
+            flow_words[: phase.elephant_flows] = _elephant_flow_words(
+                rng, phase.elephant_flows, num_queues, phase.elephant_queue)
         if payload_pool is None:
             flow_payload = rng.integers(
                 0, 2**32, (phase.flows, pkt.PAYLOAD_WORDS), dtype=np.uint32)
@@ -120,7 +213,7 @@ def render(
                 rng.integers(0, payload_pool.shape[0], phase.flows)]
         phase_bursts = []
         for _ in range(phase.ticks):
-            fidx = rng.integers(0, phase.flows, phase.burst)
+            fidx = _sample_flows(rng, phase)
             slots = _sample_slots(rng, phase.slot_mix, phase.burst)
             # payload: the flow's base payload with a per-packet twist so
             # verdicts are not constant within a flow
@@ -147,6 +240,31 @@ def default_swap_delivery(slot: int, cfg=executor.H32):
     return executor.init_params(jax.random.PRNGKey(10_000 + slot), cfg)
 
 
+def phase_commands(
+    phase: Phase,
+    *,
+    num_queues: int,
+    swap_delivery=default_swap_delivery,
+) -> list:
+    """A phase's entry events as a typed control-plane command script.
+
+    One atomic epoch: ``failed_queues`` becomes a ``FailQueues`` command
+    (RETA failover remap), phases without failures restore full service
+    (``RestoreQueues``), and ``swap_slot`` ships delivered weights as a
+    ``SwapSlot`` command.  A failover that would leave zero live queues
+    is unservable — traffic stays where it is (the 1-queue degenerate
+    case), expressed as a plain restore.
+    """
+    failed = tuple(q for q in phase.failed_queues if q < num_queues)
+    if failed and set(failed) != set(range(num_queues)):
+        cmds = [FailQueues(failed)]
+    else:
+        cmds = [RestoreQueues()]
+    if phase.swap_slot is not None:
+        cmds.append(SwapSlot(phase.swap_slot, swap_delivery(phase.swap_slot)))
+    return cmds
+
+
 def play(
     runtime,
     trace: ScenarioTrace,
@@ -155,24 +273,17 @@ def play(
 ) -> list[dict]:
     """Drive a runtime through a rendered trace; per-phase reports.
 
-    Phase-entry events: ``failed_queues`` rewrites the RETA (link
-    failover), ``swap_slot`` installs delivered weights into the resident
-    bank while traffic is in flight.  Each burst is dispatched then
-    ticked once; the backlog drains inside the phase so phase reports are
-    self-contained.
+    Each phase's entry events are submitted as one command epoch through
+    ``runtime.control``; the runtime makes them effective at the next
+    tick boundary (the first dispatch of the phase).  Each burst is
+    dispatched then ticked once; the backlog drains inside the phase so
+    phase reports are self-contained.
     """
     reports = []
     for phase, phase_bursts in zip(trace.phases, trace.bursts):
-        failed = tuple(q for q in phase.failed_queues
-                       if q < runtime.num_queues)
-        # a failover that would leave zero live queues is unservable —
-        # traffic stays where it is (the 1-queue degenerate case)
-        if failed and set(failed) != set(range(runtime.num_queues)):
-            runtime.fail_queues(failed)
-        else:
-            runtime.reset_reta()
-        if phase.swap_slot is not None:
-            runtime.swap_slot(phase.swap_slot, swap_delivery(phase.swap_slot))
+        runtime.control.submit(*phase_commands(
+            phase, num_queues=runtime.num_queues,
+            swap_delivery=swap_delivery))
         before = runtime.audit_conservation()["totals"]
         wrong0 = runtime.telemetry.wrong_verdict
         t0 = time.perf_counter()

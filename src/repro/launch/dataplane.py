@@ -1,12 +1,16 @@
 """Multi-queue data-plane driver: RSS -> rings -> sharded fused workers.
 
-Runs the emergency-scenario traffic engine (steady -> flash crowd -> link
-failover -> slot churn) through the multi-queue runtime and reports
-per-phase throughput, per-queue telemetry, and the packet-conservation
-audit.  Host-simulated queues on CPU; device-spread via ``--fanout
-shard_map`` on real meshes.
+Runs a scenario from the traffic engine (``--scenario emergency`` |
+``elephant-skew``) through the multi-queue runtime and reports per-phase
+throughput, per-queue telemetry, the packet-conservation audit, and the
+control-plane epoch log.  ``--policy`` installs a closed-loop routing
+policy (RETA rebalances land as audited ``ProgramReta`` epochs);
+``--pipeline-depth`` overlaps dispatch/device/retire.  Host-simulated
+queues on CPU; device-spread via ``--fanout shard_map`` on real meshes.
 
     PYTHONPATH=src python -m repro.launch.dataplane --queues 4
+    PYTHONPATH=src python -m repro.launch.dataplane \\
+        --policy least-depth --scenario elephant-skew
 """
 
 from __future__ import annotations
@@ -17,8 +21,9 @@ import sys
 
 import jax
 
+from repro.control import make_policy
 from repro.core import executor
-from repro.dataplane import (DataplaneRuntime, emergency_phases, play, render,
+from repro.dataplane import (DataplaneRuntime, make_scenario, play, render,
                              scenarios)
 
 
@@ -35,6 +40,13 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=128,
                     help="max rows drained per queue per tick")
     ap.add_argument("--ring-capacity", type=int, default=1024)
+    ap.add_argument("--scenario", default="emergency",
+                    choices=["emergency", "elephant-skew"])
+    ap.add_argument("--policy", default=None,
+                    choices=["static", "least-depth", "drop-rate"],
+                    help="closed-loop routing policy (default: none)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="bounded in-flight tick window (1 = synchronous)")
     ap.add_argument("--scale", type=int, default=1,
                     help="burst-size multiplier for every phase")
     ap.add_argument("--seed", type=int, default=0)
@@ -47,18 +59,23 @@ def main(argv=None) -> None:
 
     print(f"== resident bank: {args.slots} slots (random init) ==")
     bank = executor.init_bank(jax.random.PRNGKey(args.seed), args.slots)
-    phases = emergency_phases(args.slots, scale=args.scale)
-    trace = render(phases, num_slots=args.slots, seed=args.seed)
-    print(f"scenario: {len(phases)} phases, {trace.total_packets} packets, "
-          f"seed={args.seed} (replayable)")
+    phases = make_scenario(args.scenario, num_slots=args.slots,
+                           num_queues=args.queues, scale=args.scale)
+    trace = render(phases, num_slots=args.slots, seed=args.seed,
+                   num_queues=args.queues)
+    print(f"scenario: {args.scenario}, {len(phases)} phases, "
+          f"{trace.total_packets} packets, seed={args.seed} (replayable)")
 
+    policy = make_policy(args.policy) if args.policy else None
     rt = DataplaneRuntime(
         bank, num_queues=args.queues, strategy=args.strategy,
         fanout=args.fanout, batch=args.batch,
-        ring_capacity=args.ring_capacity, audit=args.audit)
+        ring_capacity=args.ring_capacity, audit=args.audit,
+        pipeline_depth=args.pipeline_depth, policy=policy)
     print(f"runtime: {args.queues} queues x batch {args.batch}, "
           f"strategy={args.strategy}, fanout={rt.fanout}, "
-          f"ring={args.ring_capacity}")
+          f"ring={args.ring_capacity}, depth={rt.pipeline_depth}, "
+          f"policy={getattr(policy, 'name', None)}")
 
     reports = play(rt, trace, swap_delivery=scenarios.default_swap_delivery)
     print(f"{'phase':<16}{'offered':>9}{'done':>9}{'dropped':>9}"
@@ -78,15 +95,27 @@ def main(argv=None) -> None:
     print(f"conservation: offered={aud['totals']['offered']} = "
           f"completed={aud['totals']['completed']} + "
           f"dropped={aud['totals']['dropped']} "
-          f"(+{aud['totals']['occupancy']} in flight) "
+          f"(+{aud['totals']['occupancy']} queued, "
+          f"+{aud['totals']['in_flight']} in flight) "
           f"ok={aud['ok']} wrong_verdict={aud['wrong_verdict']}")
+
+    log = rt.control.command_log()
+    cont = rt.control.continuity_audit()
+    print(f"control: api_v{rt.control.API_VERSION}, "
+          f"{len(log)} epoch(s) applied, continuity ok={cont['ok']}")
+    for rec in log:
+        cmds = ", ".join(c["cmd"] for c in rec["commands"])
+        print(f"  epoch {rec['epoch']:>3} @tick {rec['applied_tick']:<6} "
+              f"[{cmds}] apply={rec['apply_us']:.0f}us "
+              f"latency={rec['apply_latency_us']:.0f}us")
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"phases": reports, "snapshot": snap}, f, indent=2)
+            json.dump({"phases": reports, "snapshot": snap,
+                       "control_log": log, "continuity": cont}, f, indent=2)
             f.write("\n")
         print(f"wrote {args.json}")
-    if not aud["ok"] or aud["wrong_verdict"]:
+    if not aud["ok"] or aud["wrong_verdict"] or not cont["ok"]:
         sys.exit(1)
 
 
