@@ -1,0 +1,162 @@
+"""Fig. 10 (repo extension) — multi-host mesh data plane.
+
+Four measurements over ``MeshDataplane`` (DESIGN.md §8):
+
+  * **hosts x queues sweep** — aggregate kpps over the emergency
+    scenario for every (hosts, queues-per-host) cell, the mesh analogue
+    of fig8's queue-count sweep;
+  * **hosts=1 degeneracy** — ``MeshDataplane(hosts=1)`` replays the
+    fig8-style trace bit-identically to ``DataplaneRuntime`` (same
+    completed sequence stamps, verdicts, slots, and drops) — asserted,
+    emitted as an ``expect=0`` mismatch count;
+  * **epoch broadcast latency** — apply cost of one epoch of each
+    queue-addressed kind on a 2-host mesh (stage on every host + barrier
+    commit) vs the single-host runtime, median over trials;
+  * **failover continuity** — the cascading host failover scenario
+    (host dies -> its buckets remap -> second host degrades) replayed in
+    audit mode: zero wrong verdicts across every epoch window, mesh-wide
+    conservation, a drained dead host, and a barrier-tick spread of 0.
+
+Run standalone with ``--json BENCH_4.json`` for the machine-readable
+map, or through ``python -m benchmarks.run --only fig10``.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+import time
+
+if __package__ in (None, ""):  # invoked as `python benchmarks/fig10_mesh.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(1, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, standalone_json_main
+from repro.control import FailQueues, ProgramReta, RestoreQueues, SwapSlot
+from repro.core import executor
+from repro.dataplane import (DataplaneRuntime, MeshDataplane,
+                             cascading_failover_phases, emergency_phases,
+                             play, render, rss, scenarios)
+
+NUM_SLOTS = 4
+BATCH = 128
+
+
+def bench_mesh_sweep(bank, trace):
+    """hosts x queues-per-host throughput over the emergency scenario."""
+    for hosts in (1, 2):
+        for queues in (2, 4):
+            best = 0.0
+            for _ in range(2):  # warm best-of-2 (first run pays compile)
+                mesh = MeshDataplane(bank, hosts=hosts, num_queues=queues,
+                                     batch=BATCH, ring_capacity=8192)
+                t0 = time.perf_counter()
+                play(mesh, trace)
+                dt = time.perf_counter() - t0
+                aud = mesh.audit_conservation()
+                assert aud["ok"], aud
+                done = aud["totals"]["completed"]
+                assert done == trace.total_packets, aud  # big rings: no drops
+                best = max(best, done / dt / 1e3)
+            emit(f"fig10.mesh.h{hosts}q{queues}.kpps", best,
+                 f"{done} pkts over {hosts * queues} global queues "
+                 "best-of-2")
+
+
+def bench_hosts1_degeneracy(bank, trace):
+    """MeshDataplane(hosts=1) must be bit-identical to DataplaneRuntime."""
+    kw = dict(strategy="fused", batch=BATCH, ring_capacity=512, record=True)
+    rt = DataplaneRuntime(bank, num_queues=4, **kw)
+    play(rt, trace)
+    m1 = MeshDataplane(bank, hosts=1, num_queues=4, **kw)
+    play(m1, trace)
+    mismatch = sum((
+        m1.completed_seq != rt.completed_seq,
+        m1.completed_verdicts != rt.completed_verdicts,
+        m1.completed_slots != rt.completed_slots,
+        m1.dropped_seq != rt.dropped_seq,
+        not np.array_equal(m1.reta, rt.reta),
+    ))
+    emit("fig10.audit.hosts1_mismatch", mismatch,
+         "expect=0: hosts=1 mesh bit-identical to DataplaneRuntime")
+    assert mismatch == 0
+
+
+def _apply_us(rt, cmd, trials: int = 7) -> float:
+    samples = []
+    for _ in range(trials):
+        rt.control.submit(cmd)
+        rt.flush_control()
+        samples.append(rt.control.log[-1].apply_us)
+    return float(statistics.median(samples))
+
+
+def bench_epoch_broadcast(bank):
+    """Barrier broadcast (2 hosts) vs single-host apply, per command kind."""
+    delivered = scenarios.default_swap_delivery(1)
+    single = DataplaneRuntime(bank, num_queues=4, batch=BATCH)
+    mesh = MeshDataplane(bank, hosts=2, num_queues=4, batch=BATCH)
+    kinds = [
+        ("swap_slot", SwapSlot(1, delivered)),
+        ("program_reta", lambda rt: ProgramReta(
+            tuple(rss.indirection_table(rt.num_queues)))),
+        ("fail_queues", FailQueues((0,))),
+        ("restore_queues", RestoreQueues()),
+    ]
+    for name, cmd in kinds:
+        for label, rt in (("single_host", single), ("broadcast_h2", mesh)):
+            c = cmd(rt) if callable(cmd) else cmd
+            emit(f"fig10.epoch.{name}.{label}.apply_us", _apply_us(rt, c),
+                 "stage + barrier commit" if label != "single_host"
+                 else "single-host apply")
+
+
+def bench_cascading_failover(bank):
+    """Cascading host failover under audit: continuity at mesh scale."""
+    hosts, queues = 2, 4
+    phases = cascading_failover_phases(NUM_SLOTS, hosts=hosts,
+                                       queues_per_host=queues)
+    trace = render(phases, num_slots=NUM_SLOTS, seed=0,
+                   num_queues=hosts * queues)
+    mesh = MeshDataplane(bank, hosts=hosts, num_queues=queues, batch=BATCH,
+                         ring_capacity=512, audit=True, record=True)
+    reports = play(mesh, trace)
+    aud = mesh.audit_conservation()
+    assert aud["ok"], aud
+    t = aud["totals"]
+    assert t["offered"] == t["completed"] + t["dropped"] == \
+        trace.total_packets, t
+    cont = mesh.control.continuity_audit()
+    assert cont["ok"], cont
+    down = next(r for r in reports if r["phase"] == "host_down")
+    spread = max(max(r.host_ticks) - min(r.host_ticks)
+                 for r in mesh.control.log if r.applied)
+    emit("fig10.audit.wrong_verdict_cascading_failover",
+         cont["wrong_verdict_total"],
+         f"expect=0 across {len(cont['epochs'])} epochs")
+    emit("fig10.audit.barrier_tick_spread", spread,
+         "expect=0: every host applies each epoch at one tick")
+    emit("fig10.audit.failover_unaccounted_packets",
+         t["offered"] - t["completed"] - t["dropped"],
+         "expect=0: mesh-wide conservation")
+    emit("fig10.failover.host_down_kpps", down["kpps"],
+         "throughput while surviving host absorbs remapped buckets")
+    assert cont["wrong_verdict_total"] == 0 and spread == 0
+
+
+def main():
+    bank = executor.init_bank(jax.random.PRNGKey(0), NUM_SLOTS)
+    trace = render(emergency_phases(NUM_SLOTS), num_slots=NUM_SLOTS, seed=0)
+    bench_mesh_sweep(bank, trace)
+    bench_hosts1_degeneracy(bank, trace)
+    bench_epoch_broadcast(bank)
+    bench_cascading_failover(bank)
+
+
+if __name__ == "__main__":
+    standalone_json_main(main, __doc__)

@@ -109,7 +109,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (fig4_runtime, fig5_scaling, fig6_slot_behavior,
                             fig7_fused, fig8_dataplane, fig9_control,
-                            roofline, table4_continuity, table5_controlplane)
+                            fig10_mesh, roofline, table4_continuity,
+                            table5_controlplane)
 
     benches = [
         ("fig4", fig4_runtime.main),
@@ -118,6 +119,7 @@ def main(argv=None) -> None:
         ("fig7", fig7_fused.main),
         ("fig8", fig8_dataplane.main),
         ("fig9", fig9_control.main),
+        ("fig10", fig10_mesh.main),
         ("table4", table4_continuity.main),
         ("table5", table5_controlplane.main),
         ("roofline", roofline.main),

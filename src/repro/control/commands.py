@@ -31,8 +31,12 @@ from typing import Any
 import numpy as np
 
 #: Control-plane wire/API version.  Bump on any change to the command
-#: vocabulary or epoch application semantics.
-API_VERSION = 1
+#: vocabulary or epoch application semantics.  v2: queue-addressed
+#: commands (``ProgramReta`` / ``FailQueues`` / ``RestoreQueues``) accept
+#: *global* queue ids on mesh runtimes (``host * Q + queue``, host-major
+#: — see ``rss.global_queue_id``), epochs commit under a cross-host
+#: apply-tick barrier, and the log records per-host apply ticks.
+API_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)

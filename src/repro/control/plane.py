@@ -22,6 +22,16 @@ semantics.  This module gives it three:
 The ``ControlPlane`` object is the ONLY sanctioned mutation path; the
 legacy ``DataplaneRuntime.swap_slot/set_reta/fail_queues`` methods are
 deprecation shims that emit single-command epochs through it.
+
+The same object fronts a multi-host mesh unchanged: a ``MeshDataplane``
+implements the runtime protocol this plane drives — ``_validate_command``
+is the *stage* phase (every host validates its projection, none mutates;
+one host's rejection rejects the whole epoch), ``_apply_command`` is the
+*commit* phase (every host applies between the same two mesh ticks), and
+``_control_state``/``_rollback_control_state`` snapshot mesh-wide so a
+failed commit rolls back every host, not just the one that raised.
+Mesh runtimes stamp ``EpochRecord.host_ticks`` with the per-host apply
+tick — all equal, the epoch-barrier proof in the log itself.
 """
 
 from __future__ import annotations
@@ -46,6 +56,9 @@ class EpochRecord:
     apply_us: float | None = None          # apply duration alone
     wrong_verdict_at_apply: int | None = None
     error: str | None = None           # set when the epoch was rejected
+    # mesh runtimes stamp the per-host tick each epoch became effective
+    # at (all equal by the barrier); None on single-host runtimes
+    host_ticks: tuple[int, ...] | None = None
 
     @property
     def applied(self) -> bool:
@@ -60,6 +73,8 @@ class EpochRecord:
             "apply_latency_us": self.apply_latency_us,
             "apply_us": self.apply_us,
             "error": self.error,
+            "host_ticks": (list(self.host_ticks)
+                           if self.host_ticks is not None else None),
         }
 
 

@@ -32,7 +32,13 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class PolicyView:
-    """Frozen snapshot a policy may react to (no live runtime access)."""
+    """Frozen snapshot a policy may react to (no live runtime access).
+
+    On a mesh runtime the view spans every host: ``num_queues`` is the
+    global queue count, queue-indexed arrays are in host-major global
+    order, and RETA entries are global queue ids — so depth/drop policies
+    written against this view rebalance across hosts without change.
+    """
     tick: int
     num_queues: int
     reta: np.ndarray          # (RETA_SIZE,) current bucket -> queue map
@@ -40,6 +46,7 @@ class PolicyView:
     queue_dropped: np.ndarray  # (Q,) cumulative tail-drops per queue
     bucket_load: np.ndarray   # (RETA_SIZE,) cumulative offered per bucket
     failed_queues: frozenset[int] = frozenset()
+    num_hosts: int = 1        # mesh host count (1 = single-host runtime)
 
     def live_queues(self) -> list[int]:
         return [q for q in range(self.num_queues) if q not in self.failed_queues]

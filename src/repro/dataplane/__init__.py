@@ -1,17 +1,21 @@
-"""Multi-queue data-plane runtime (DESIGN.md §6-§7).
+"""Multi-queue data-plane runtime (DESIGN.md §6-§8).
 
-The AF_XDP deployment shape in software: ``rss`` hashes flows to queues,
+The AF_XDP deployment shape in software: ``rss`` hashes flows to queues
+(and, at mesh scale, to (host, queue) pairs via global queue ids),
 ``ring`` buffers each queue with counted tail-drop, ``runtime`` fans the
 fused forwarding program out across queues (loop / vmap / shard_map)
-behind an epoch-stamped control plane (`repro.control`), ``telemetry``
-exports per-queue counters, and ``scenarios`` generates phased emergency
+behind an epoch-stamped control plane (`repro.control`), ``mesh`` lifts
+the runtime to a multi-host mesh (per-host shards, cross-host RSS,
+epoch-barrier control fan-out), ``telemetry`` exports per-queue counters
+with a mesh-wide ``merge``, and ``scenarios`` generates phased emergency
 traffic — rendered as command scripts — to drive it all.
 """
 
 from repro.dataplane.ring import PacketRing, RingCounters  # noqa: F401
 from repro.dataplane.runtime import DataplaneRuntime, queue_mesh  # noqa: F401
+from repro.dataplane.mesh import MeshDataplane  # noqa: F401
 from repro.dataplane.scenarios import (  # noqa: F401
-    Phase, ScenarioTrace, elephant_skew_phases, emergency_phases,
-    make_scenario, phase_commands, play, render, SEQ_WORD,
+    Phase, ScenarioTrace, cascading_failover_phases, elephant_skew_phases,
+    emergency_phases, make_scenario, phase_commands, play, render, SEQ_WORD,
 )
 from repro.dataplane import rss, telemetry  # noqa: F401

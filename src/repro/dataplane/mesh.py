@@ -1,0 +1,358 @@
+"""Multi-host mesh data plane: one facade over per-host runtime shards.
+
+The paper's north star is in-network inference that scales with the
+*network*, not a single box: INSIGHT frames in-network AI as inherently
+topology-spanning and FENIX coordinates per-device inference engines
+across a fabric.  ``MeshDataplane`` lifts the single-host
+`repro.dataplane.runtime.DataplaneRuntime` to that shape — ``hosts``
+runtime shards, each with its own ring set, worker fan-out (devices via
+`repro.launch.mesh.make_queue_mesh`), and telemetry, behind one facade
+that speaks the exact same API (``dispatch``/``tick``/``drain``/
+``audit_conservation``/``snapshot``/``control``), so scenarios, policies
+and benchmarks drive a mesh and a single host identically.
+
+**Cross-host RSS.**  The 128-bucket RETA generalizes so each bucket
+resolves to a ``(host, queue)`` pair, encoded as a host-major *global
+queue id* (``rss.global_queue_id``): the mesh table over ``H * Q``
+global ids is literally the single-host table over more queues, so the
+default round-robin layout, affinity preservation, and failover remap
+are the same code — ``MeshDataplane(hosts=1)`` is bit-identical to
+``DataplaneRuntime`` by construction, and cross-host failover never
+remaps a flow whose (host, queue) both survive.  Dispatch hashes each
+burst ONCE, resolves buckets through the mesh RETA, and hands every
+host its share together with the already-resolved local queue ids
+(``gid % Q``); each shard also holds the *local projection* of the mesh
+table (exact for the buckets it owns, in-range-but-unreachable for the
+rest) so its own RETA state stays valid.
+
+**Epoch-barrier control fan-out.**  The facade implements the runtime
+protocol `repro.control.ControlPlane` drives, so ONE unmodified
+``control.submit`` broadcasts an epoch to every host under a two-phase
+barrier: ``_validate_command`` *stages* the epoch (mesh-scope checks
+plus per-host validation of each shard's projection — any host's
+rejection rejects the epoch before anything mutates), and
+``_apply_command`` *commits* it to every host between the same two mesh
+ticks, after ``retire_all`` has made every shard quiescent (the
+barrier).  ``_control_state`` snapshots mesh-wide, so a commit that
+fails on any host rolls back every host atomically.  Applied epochs are
+stamped with ``host_ticks`` — the per-host apply tick, all equal — and
+the epoch log, ``continuity_audit()``, and the ``RoutingPolicy`` loop
+(fed by mesh-merged telemetry and global-id views) work unchanged at
+mesh scale.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.control import (ControlPlane, FailQueues, ProgramReta,
+                           RestoreQueues, SetPolicy, SwapSlot)
+from repro.dataplane import rss
+from repro.dataplane import runtime as runtime_mod
+from repro.dataplane import telemetry as telemetry_mod
+from repro.dataplane.runtime import DataplaneRuntime
+
+
+class _MeshCounters:
+    """Mesh-level control counters + live cross-host audit aggregation.
+
+    ``slot_swaps``/``reta_updates`` count mesh *commands* (one broadcast
+    = one event), while ``wrong_verdict`` sums the per-host audit
+    counters live — the shape ``ControlPlane`` and ``continuity_audit``
+    expect from a runtime's ``telemetry``.
+    """
+
+    def __init__(self, shards):
+        self._shards = shards
+        self.slot_swaps = 0
+        self.reta_updates = 0
+
+    @property
+    def wrong_verdict(self) -> int:
+        return sum(s.telemetry.wrong_verdict for s in self._shards)
+
+
+class MeshDataplane:
+    """``hosts`` DataplaneRuntime shards behind one runtime-shaped facade.
+
+    ``num_queues`` is *per host*; the mesh exposes ``hosts * num_queues``
+    global queues (``self.num_queues``), and every queue-addressed
+    control command (``ProgramReta`` / ``FailQueues`` / ``RestoreQueues``)
+    speaks global ids.  Remaining keyword arguments (strategy, fanout,
+    batch, ring_capacity, audit, record, pipeline_depth, ...) pass
+    through to every shard; ``policy`` is held at mesh level and sees
+    the merged, global-id view.
+    """
+
+    def __init__(self, bank, *, hosts: int, num_queues: int,
+                 policy=None, **runtime_kw):
+        if hosts < 1:
+            raise ValueError("need at least one host")
+        self.hosts = int(hosts)
+        self.num_queues_per_host = int(num_queues)
+        self.num_queues = self.hosts * self.num_queues_per_host
+        self.rss_key = runtime_kw.get("rss_key", rss.DEFAULT_KEY)
+        # shards never get the policy: rebalancing happens once, at mesh
+        # scope, over global ids — not per host over local ids
+        self.shards = [
+            DataplaneRuntime(bank, num_queues=self.num_queues_per_host,
+                             **runtime_kw)
+            for _ in range(self.hosts)
+        ]
+        self.reta = rss.mesh_indirection_table(
+            self.hosts, self.num_queues_per_host)
+        self.failed_queues: set[int] = set()     # global ids
+        self.bucket_load = np.zeros(len(self.reta), np.int64)
+        self.policy = policy
+        self.telemetry = _MeshCounters(self.shards)
+        self.control = ControlPlane(self)
+        self._tick_count = 0
+        self._t_start: float | None = None
+
+    # -- shard-projection helpers -------------------------------------------
+
+    @property
+    def num_slots(self) -> int:
+        return self.shards[0].num_slots
+
+    @property
+    def pipeline_depth(self) -> int:
+        return self.shards[0].pipeline_depth
+
+    @property
+    def rings(self) -> list:
+        """All rings in host-major global-queue order."""
+        return [r for s in self.shards for r in s.rings]
+
+    @property
+    def completed_seq(self) -> list:
+        return [seqs for s in self.shards for seqs in s.completed_seq]
+
+    @property
+    def completed_verdicts(self) -> list:
+        return [v for s in self.shards for v in s.completed_verdicts]
+
+    @property
+    def completed_slots(self) -> list:
+        return [v for s in self.shards for v in s.completed_slots]
+
+    @property
+    def dropped_seq(self) -> list[int]:
+        return [x for s in self.shards for x in s.dropped_seq]
+
+    def _shard_reta(self, reta: np.ndarray) -> np.ndarray:
+        """Project the mesh RETA onto a host-local table: ``gid % Q`` is
+        the exact queue for buckets the host owns and an in-range (but
+        never-dispatched-to) value for buckets other hosts own.  The
+        projection is host-independent, so one table serves every shard;
+        mesh dispatch hands shards resolved queue ids directly, but the
+        projection keeps each shard's own RETA state valid.
+        """
+        return (np.asarray(reta, np.int64)
+                % self.num_queues_per_host).astype(np.int32)
+
+    # -- control plane: the runtime protocol ControlPlane drives ------------
+
+    def _validate_command(self, cmd) -> None:
+        """STAGE phase of the two-phase broadcast: validate at mesh scope
+        (global-id ranges), then stage the per-host projection on EVERY
+        shard without mutating any — a single host's rejection rejects
+        the whole epoch before any host commits."""
+        if isinstance(cmd, SwapSlot):
+            for s in self.shards:
+                s._validate_command(cmd)
+        elif isinstance(cmd, ProgramReta):
+            reta = np.asarray(cmd.reta, np.int32)
+            if reta.size == 0:
+                raise ValueError("empty RETA")
+            if reta.min() < 0 or reta.max() >= self.num_queues:
+                raise ValueError("RETA entry out of global queue range")
+            proj = ProgramReta(tuple(self._shard_reta(reta)))
+            for s in self.shards:
+                s._validate_command(proj)
+        elif isinstance(cmd, (FailQueues, RestoreQueues)):
+            if any(not 0 <= q < self.num_queues for q in cmd.queues):
+                raise ValueError("queue id out of global range")
+        elif isinstance(cmd, SetPolicy):
+            if cmd.policy is not None and not hasattr(cmd.policy, "propose"):
+                raise TypeError("policy must implement propose(view)")
+        else:
+            raise TypeError(f"not a control command: {cmd!r}")
+
+    def _apply_command(self, cmd) -> None:
+        """COMMIT phase: apply ONE mesh command to every host between the
+        same two mesh ticks.  Only ``ControlPlane.apply_pending`` calls
+        this; its mesh-wide ``_control_state`` snapshot makes a commit
+        that fails on any host roll back every host."""
+        if isinstance(cmd, SwapSlot):
+            for s in self.shards:
+                s._apply_command(cmd)
+            self.telemetry.slot_swaps += 1
+        elif isinstance(cmd, ProgramReta):
+            self._install_reta(np.asarray(cmd.reta, np.int32))
+        elif not runtime_mod.apply_routing_command(self, cmd):
+            # the shared appliers see the mesh's global queue count and
+            # its projecting _install_reta — the same audited code path
+            # as the single-host runtime, over more queues
+            raise TypeError(f"not a control command: {cmd!r}")
+
+    def _install_reta(self, reta: np.ndarray) -> None:
+        reta = np.asarray(reta, np.int32)
+        if reta.min() < 0 or reta.max() >= self.num_queues:
+            raise ValueError("RETA entry out of global queue range")
+        proj = ProgramReta(tuple(self._shard_reta(reta)))
+        for s in self.shards:
+            s._apply_command(proj)
+        if len(reta) != len(self.bucket_load):
+            self.bucket_load = np.zeros(len(reta), np.int64)
+        self.reta = reta
+        self.telemetry.reta_updates += 1
+
+    def _control_state(self) -> dict:
+        """Mesh-wide snapshot: facade state plus every shard's control
+        state, so a rejected epoch rolls back atomically across hosts."""
+        return dict(
+            reta=self.reta, failed=set(self.failed_queues),
+            policy=self.policy, bucket_load=self.bucket_load,
+            slot_swaps=self.telemetry.slot_swaps,
+            reta_updates=self.telemetry.reta_updates,
+            shards=[s._control_state() for s in self.shards],
+        )
+
+    def _rollback_control_state(self, st: dict) -> None:
+        self.reta = st["reta"]
+        self.failed_queues = st["failed"]
+        self.policy = st["policy"]
+        self.bucket_load = st["bucket_load"]
+        self.telemetry.slot_swaps = st["slot_swaps"]
+        self.telemetry.reta_updates = st["reta_updates"]
+        for s, ss in zip(self.shards, st["shards"]):
+            s._rollback_control_state(ss)
+
+    def _apply_control(self) -> None:
+        """Epoch-barrier commit: retire every in-flight tick on every
+        host (the barrier — all shards quiescent at one agreed mesh tick
+        boundary), apply the pending epochs, and stamp each applied one
+        with the per-host apply ticks.  Stamping runs even when a later
+        pending epoch is rejected mid-flush (``apply_pending`` raises):
+        epochs that DID commit must still carry their barrier proof.
+        Shards tick in lockstep with the mesh, so the stamps are equal —
+        checked, not assumed."""
+        if not self.control.has_pending:
+            return
+        self.retire_all()
+        try:
+            self.control.apply_pending(self._tick_count)
+        finally:
+            self._stamp_barrier()
+
+    def _stamp_barrier(self) -> None:
+        host_ticks = tuple(s._tick_count for s in self.shards)
+        if len(set(host_ticks)) != 1:   # host_ticks is proof: drift is fatal
+            raise RuntimeError(f"shard tick drift across hosts: {host_ticks}")
+        for rec in self.control.log:
+            if rec.applied and rec.host_ticks is None:
+                rec.host_ticks = host_ticks
+
+    @property
+    def barrier_log(self) -> list[dict]:
+        """The barrier history, derived from the epoch log (no second
+        always-growing list to keep consistent)."""
+        return [{"epoch": r.epoch, "mesh_tick": r.applied_tick,
+                 "host_ticks": list(r.host_ticks)}
+                for r in self.control.log
+                if r.applied and r.host_ticks is not None]
+
+    def _tick_boundary(self) -> None:
+        self._apply_control()
+        runtime_mod.consult_policy(self, num_hosts=self.hosts)
+
+    def flush_control(self) -> None:
+        """Force-apply pending epochs now (host code runs between ticks)."""
+        self._apply_control()
+
+    # -- data plane ---------------------------------------------------------
+
+    def dispatch(self, packets_np: np.ndarray, now: float | None = None) -> dict:
+        """RSS-dispatch one arrival burst across hosts.
+
+        ONE Toeplitz hash resolves every flow through the mesh RETA to a
+        (host, queue); each shard then admits its share through its own
+        rings exactly as a single-host runtime would, taking the already-
+        resolved local queue ids (the burst is never hashed twice).  The
+        arrival edge is a mesh tick boundary: pending epochs commit first.
+        """
+        self._apply_control()
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        packets_np = np.asarray(packets_np)
+        h = rss.toeplitz_hash(rss.flow_words_of(packets_np), self.rss_key)
+        bucket = rss.bucket_index(h, len(self.reta)).astype(np.int64)
+        self.bucket_load += np.bincount(bucket, minlength=len(self.reta))
+        host, queue = rss.split_host_queue(self.reta[bucket],
+                                           self.num_queues_per_host)
+        per_host = []
+        for i, s in enumerate(self.shards):
+            mine = host == i
+            per_host.append(
+                s.dispatch(packets_np[mine], now=now, queues=queue[mine]))
+        return {"per_host": per_host,
+                "dropped": sum(p["dropped"] for p in per_host)}
+
+    def tick(self) -> int:
+        """One lockstep tick of every host shard (each keeps its own
+        bounded dispatch/device/retire pipeline)."""
+        self._tick_boundary()
+        self._tick_count += 1
+        return sum(s.tick() for s in self.shards)
+
+    def retire_all(self) -> None:
+        """Flush every shard's pipeline (the cross-host barrier point)."""
+        for s in self.shards:
+            s.retire_all()
+
+    def in_flight_rows(self) -> list[int]:
+        """Rows popped but not retired, host-major global-queue order."""
+        return [n for s in self.shards for n in s.in_flight_rows()]
+
+    def drain(self, max_ticks: int = 100_000) -> int:
+        return runtime_mod.drain_rings(self, max_ticks)
+
+    # -- audit + reporting --------------------------------------------------
+
+    def audit_conservation(self) -> dict:
+        """Mesh-wide packet conservation: per-host audits, a flattened
+        per-queue view in global order, and totals summed across hosts —
+        ``offered == admitted + dropped`` and ``admitted == completed +
+        occupancy + in_flight`` must hold per host and in aggregate."""
+        per_host = [s.audit_conservation() for s in self.shards]
+        totals = {k: sum(h["totals"][k] for h in per_host)
+                  for k in ("offered", "admitted", "dropped", "completed",
+                            "occupancy", "in_flight")}
+        return {
+            "per_host": per_host,
+            "per_queue": [q for h in per_host for q in h["per_queue"]],
+            "totals": totals,
+            "ok": all(h["ok"] for h in per_host),
+            "wrong_verdict": self.telemetry.wrong_verdict,
+        }
+
+    def snapshot(self) -> dict:
+        elapsed = (time.perf_counter() - self._t_start
+                   if self._t_start is not None else None)
+        merged = telemetry_mod.merge([s.telemetry for s in self.shards])
+        out = merged.snapshot(elapsed_s=elapsed)
+        # broadcast commands count once, not once per host
+        out["slot_swaps"] = self.telemetry.slot_swaps
+        out["reta_updates"] = self.telemetry.reta_updates
+        out["hosts"] = self.hosts
+        out["queues_per_host"] = self.num_queues_per_host
+        out["conservation"] = self.audit_conservation()
+        out["fanout"] = self.shards[0].fanout
+        out["strategy"] = self.shards[0].strategy
+        out["pipeline_depth"] = self.pipeline_depth
+        out["policy"] = getattr(self.policy, "name", None)
+        out["control"] = self.control.stats()
+        return out

@@ -48,7 +48,6 @@ across every control command kind, not just slot swaps.
 from __future__ import annotations
 
 import collections
-import math
 import time
 import warnings
 
@@ -75,17 +74,73 @@ _DEPRECATION = ("%s() is a deprecation shim: submit a %s command through "
 
 
 def queue_mesh(num_queues: int):
-    """A mesh whose leading axis shards the queue dimension.
+    """Compatibility alias: device layout now lives in one place —
+    `repro.launch.mesh.make_queue_mesh` (the single source of truth)."""
+    return mesh_lib.make_queue_mesh(num_queues)
 
-    Reuses the production host mesh when its data axis divides the queue
-    count; otherwise builds a dedicated 1-axis mesh over the largest
-    device count that does.
-    """
-    m = mesh_lib.make_host_mesh(1)
-    if num_queues % m.devices.shape[0] == 0:
-        return m, "data"
-    d = math.gcd(num_queues, jax.device_count())
-    return jax.make_mesh((d,), ("queues",)), "queues"
+
+def apply_routing_command(rt, cmd) -> bool:
+    """Apply the service-state commands whose semantics are identical on
+    the single-host runtime and the mesh facade (which passes global
+    queue ids through ``rt.num_queues`` and its own ``_install_reta``):
+    ``FailQueues`` (union + affinity-preserving failover), ``RestoreQueues``
+    (default table minus still-failed), ``SetPolicy``.  Returns False for
+    any other command so callers keep their own dispatch."""
+    if isinstance(cmd, FailQueues):
+        failed = rt.failed_queues | set(cmd.queues)
+        # compute-then-commit: an unservable failover (zero live queues)
+        # raises here without mutating any runtime state
+        table = rss.failover_table(rt.reta, tuple(sorted(failed)),
+                                   num_queues=rt.num_queues)
+        rt.failed_queues = failed
+        rt._install_reta(table)
+    elif isinstance(cmd, RestoreQueues):
+        rt.failed_queues -= set(cmd.queues or range(rt.num_queues))
+        rt._install_reta(rss.restore_table(
+            rt.num_queues, len(rt.reta), rt.failed_queues))
+    elif isinstance(cmd, SetPolicy):
+        rt.policy = cmd.policy
+    else:
+        return False
+    return True
+
+
+def consult_policy(rt, *, num_hosts: int = 1) -> None:
+    """Tick-boundary policy consultation, shared by the single-host
+    runtime and the mesh facade: freeze a view of the runtime's queue
+    pressure, and submit any proposal as an ordinary ``ProgramReta``
+    epoch (effective at the *next* boundary).  ``rt`` needs the runtime
+    protocol surface: policy / rings / reta / bucket_load /
+    failed_queues / control."""
+    if rt.policy is None:
+        return
+    view = policy_mod.PolicyView(
+        tick=rt._tick_count,
+        num_queues=rt.num_queues,
+        num_hosts=num_hosts,
+        reta=rt.reta.copy(),
+        queue_depth=np.array([len(r) for r in rt.rings], np.int64),
+        queue_dropped=np.array(
+            [r.counters.dropped for r in rt.rings], np.int64),
+        bucket_load=rt.bucket_load.copy(),
+        failed_queues=frozenset(rt.failed_queues),
+    )
+    proposal = rt.policy.propose(view)
+    if proposal is not None and not np.array_equal(proposal, rt.reta):
+        rt.control.submit(ProgramReta(tuple(proposal)))
+
+
+def drain_rings(rt, max_ticks: int = 100_000) -> int:
+    """Tick until every ring is empty, then flush the pipeline — the one
+    drain loop both the single-host runtime and the mesh facade use."""
+    done = 0
+    for _ in range(max_ticks):
+        n = rt.tick()
+        done += n
+        if n == 0 and not any(len(r) for r in rt.rings):
+            rt.retire_all()
+            return done
+    raise RuntimeError("drain did not converge")
 
 
 class _InFlight:
@@ -224,25 +279,7 @@ class DataplaneRuntime:
             self.telemetry.slot_swaps += 1
         elif isinstance(cmd, ProgramReta):
             self._install_reta(np.asarray(cmd.reta, np.int32))
-        elif isinstance(cmd, FailQueues):
-            failed = self.failed_queues | set(cmd.queues)
-            # compute-then-commit: an unservable failover (zero live
-            # queues) raises here without mutating any runtime state
-            table = rss.failover_table(self.reta, tuple(sorted(failed)),
-                                       num_queues=self.num_queues)
-            self.failed_queues = failed
-            self._install_reta(table)
-        elif isinstance(cmd, RestoreQueues):
-            self.failed_queues -= set(cmd.queues or range(self.num_queues))
-            base = rss.indirection_table(self.num_queues, len(self.reta))
-            if self.failed_queues:
-                base = rss.failover_table(
-                    base, tuple(sorted(self.failed_queues)),
-                    num_queues=self.num_queues)
-            self._install_reta(base)
-        elif isinstance(cmd, SetPolicy):
-            self.policy = cmd.policy
-        else:
+        elif not apply_routing_command(self, cmd):
             raise TypeError(f"not a control command: {cmd!r}")
 
     def _control_state(self) -> dict:
@@ -286,20 +323,7 @@ class DataplaneRuntime:
         then let the routing policy react to current telemetry (its
         proposal lands as an epoch at the *next* boundary)."""
         self._apply_control()
-        if self.policy is not None:
-            view = policy_mod.PolicyView(
-                tick=self._tick_count,
-                num_queues=self.num_queues,
-                reta=self.reta.copy(),
-                queue_depth=np.array([len(r) for r in self.rings], np.int64),
-                queue_dropped=np.array(
-                    [r.counters.dropped for r in self.rings], np.int64),
-                bucket_load=self.bucket_load.copy(),
-                failed_queues=frozenset(self.failed_queues),
-            )
-            proposal = self.policy.propose(view)
-            if proposal is not None and not np.array_equal(proposal, self.reta):
-                self.control.submit(ProgramReta(tuple(proposal)))
+        consult_policy(self)
 
     def flush_control(self) -> None:
         """Force-apply pending epochs now (we are between ticks by
@@ -338,11 +362,18 @@ class DataplaneRuntime:
 
     # -- data plane ---------------------------------------------------------
 
-    def dispatch(self, packets_np: np.ndarray, now: float | None = None) -> dict:
+    def dispatch(self, packets_np: np.ndarray, now: float | None = None,
+                 *, queues: np.ndarray | None = None) -> dict:
         """RSS-dispatch one arrival burst into the per-queue rings.
 
         The arrival edge is a tick boundary: queued control epochs (RETA
         rewrites in particular) become effective before routing.
+
+        ``queues`` is an optional precomputed per-packet queue-id array:
+        the mesh facade resolves (host, queue) from ONE mesh-level hash
+        and hands each shard its local ids, so the burst is never hashed
+        twice.  The caller then owns per-bucket load accounting; when
+        omitted the runtime hashes and resolves through its own RETA.
         """
         self._apply_control()
         if self._t_start is None:
@@ -350,10 +381,19 @@ class DataplaneRuntime:
         if now is None:
             now = time.perf_counter()
         packets_np = np.asarray(packets_np)
-        h = rss.toeplitz_hash(rss.flow_words_of(packets_np), self.rss_key)
-        bucket = rss.bucket_index(h, len(self.reta)).astype(np.int64)
-        self.bucket_load += np.bincount(bucket, minlength=len(self.reta))
-        q = self.reta[bucket]
+        if queues is None:
+            h = rss.toeplitz_hash(rss.flow_words_of(packets_np), self.rss_key)
+            bucket = rss.bucket_index(h, len(self.reta)).astype(np.int64)
+            self.bucket_load += np.bincount(bucket, minlength=len(self.reta))
+            q = self.reta[bucket]
+        else:
+            q = np.asarray(queues, np.int64)
+            if q.size and not (0 <= q.min() and q.max() < self.num_queues):
+                # a global id handed to a shard would otherwise match no
+                # ring and vanish without tripping the conservation audit
+                raise ValueError(
+                    f"precomputed queue ids out of range for "
+                    f"{self.num_queues} queues")
         per_queue = []
         for i, ring in enumerate(self.rings):
             rows = packets_np[q == i]
@@ -465,14 +505,7 @@ class DataplaneRuntime:
         return out
 
     def drain(self, max_ticks: int = 100_000) -> int:
-        done = 0
-        for _ in range(max_ticks):
-            n = self.tick()
-            done += n
-            if n == 0 and not any(len(r) for r in self.rings):
-                self.retire_all()
-                return done
-        raise RuntimeError("drain did not converge")
+        return drain_rings(self, max_ticks)
 
     # -- audit + reporting --------------------------------------------------
 

@@ -110,15 +110,67 @@ def elephant_skew_phases(
     ]
 
 
+def cascading_failover_phases(
+    num_slots: int,
+    *,
+    hosts: int,
+    queues_per_host: int,
+    scale: int = 1,
+) -> list[Phase]:
+    """Cascading host failover at mesh scale, in global queue ids.
+
+    The mesh storyline the ROADMAP's multi-host items call for: a steady
+    baseline, then an entire host dies at once (all of its queues fail,
+    so its RETA buckets remap across the surviving hosts), then a second
+    host *degrades* under the absorbed load (half its queues fail on
+    top), then service restores with a slot swap — composed entirely
+    from the existing typed commands via ``phase_commands``.  On a
+    1-host mesh it degenerates to a two-queue cascade (needs >= 3
+    queues so a survivor remains).
+    """
+    total = hosts * queues_per_host
+    uniform = tuple(1.0 / num_slots for _ in range(num_slots))
+    if hosts > 1:
+        dead_host = tuple(range(queues_per_host))            # host 0, entirely
+        degraded = tuple(queues_per_host + q                 # half of host 1
+                         for q in range((queues_per_host + 1) // 2))
+    else:
+        dead_host, degraded = (0,), (1,)
+    if total - len(dead_host) - len(degraded) < 1:
+        raise ValueError(
+            "cascading failover would leave zero live (host, queue) pairs; "
+            "add hosts or queues")
+    return [
+        Phase("steady", ticks=6, burst=128 * scale, flows=64,
+              slot_mix=uniform),
+        Phase("host_down", ticks=6, burst=192 * scale, flows=64,
+              slot_mix=uniform, failed_queues=dead_host),
+        Phase("cascade", ticks=6, burst=192 * scale, flows=64,
+              slot_mix=uniform, failed_queues=dead_host + degraded),
+        Phase("recovery", ticks=6, burst=128 * scale, flows=64,
+              slot_mix=uniform, swap_slot=1 % num_slots),
+    ]
+
+
 def make_scenario(name: str, *, num_slots: int, num_queues: int,
-                  scale: int = 1) -> list[Phase]:
-    """CLI registry: scenario name -> phase list."""
+                  scale: int = 1, hosts: int = 1) -> list[Phase]:
+    """CLI registry: scenario name -> phase list.
+
+    ``num_queues`` is per host; queue-addressed phase fields (failed
+    queues, elephant pinning) are in global ids over ``hosts *
+    num_queues``.
+    """
+    total = hosts * num_queues
     if name == "emergency":
         return emergency_phases(num_slots, scale=scale)
     if name == "elephant-skew":
-        return elephant_skew_phases(num_slots, num_queues, scale=scale)
-    raise ValueError(f"unknown scenario {name!r} "
-                     "(known: ['emergency', 'elephant-skew'])")
+        return elephant_skew_phases(num_slots, total, scale=scale)
+    if name == "cascading-failover":
+        return cascading_failover_phases(
+            num_slots, hosts=hosts, queues_per_host=num_queues, scale=scale)
+    raise ValueError(
+        f"unknown scenario {name!r} (known: ['emergency', 'elephant-skew', "
+        "'cascading-failover'])")
 
 
 @dataclasses.dataclass

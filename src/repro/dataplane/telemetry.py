@@ -87,6 +87,7 @@ class Telemetry:
     """All-queue telemetry plus runtime-level event counters."""
 
     def __init__(self, num_queues: int, num_slots: int):
+        self.num_slots = num_slots
         self.queues = [QueueTelemetry(q, num_slots) for q in range(num_queues)]
         self.slot_swaps = 0
         self.reta_updates = 0
@@ -109,3 +110,44 @@ class Telemetry:
         if elapsed_s:
             out["aggregate_pps"] = total / elapsed_s
         return out
+
+
+def _copy_queue(src: QueueTelemetry, queue: int) -> QueueTelemetry:
+    out = QueueTelemetry(queue, len(src.per_slot_total))
+    out.ticks = src.ticks
+    out.completed = src.completed
+    out.busy_s = src.busy_s
+    out.per_slot_total = src.per_slot_total.copy()
+    out.per_slot_malicious = src.per_slot_malicious.copy()
+    out.actions = src.actions.copy()
+    out.latency_hist = src.latency_hist.copy()
+    out.latency_sum_us = src.latency_sum_us
+    out.latency_max_us = src.latency_max_us
+    return out
+
+
+def merge(telemetries) -> Telemetry:
+    """Aggregate per-host telemetries into one mesh-wide view.
+
+    Queues are renumbered into host-major global order (host ``h`` queue
+    ``q`` lands at ``h * Q + q``, matching ``rss.global_queue_id``) and
+    the runtime-level event counters — slot swaps, RETA updates, audit
+    wrong-verdict mismatches — are summed, so policies and benchmarks
+    read one ``Telemetry`` instead of hand-summing per-host dicts.  The
+    result is a deep copy: mutating it never touches the inputs.  Note a
+    mesh-broadcast command counts once per host here; the mesh facade
+    overrides those counters with its command-level counts.
+    """
+    tels = list(telemetries)
+    if not tels:
+        raise ValueError("merge needs at least one telemetry")
+    if len({t.num_slots for t in tels}) != 1:
+        raise ValueError("cannot merge telemetries with different slot counts")
+    out = Telemetry(0, tels[0].num_slots)
+    for t in tels:
+        for qt in t.queues:
+            out.queues.append(_copy_queue(qt, len(out.queues)))
+        out.slot_swaps += t.slot_swaps
+        out.reta_updates += t.reta_updates
+        out.wrong_verdict += t.wrong_verdict
+    return out

@@ -1,16 +1,21 @@
 """Multi-queue data-plane driver: RSS -> rings -> sharded fused workers.
 
 Runs a scenario from the traffic engine (``--scenario emergency`` |
-``elephant-skew``) through the multi-queue runtime and reports per-phase
-throughput, per-queue telemetry, the packet-conservation audit, and the
-control-plane epoch log.  ``--policy`` installs a closed-loop routing
-policy (RETA rebalances land as audited ``ProgramReta`` epochs);
+``elephant-skew`` | ``cascading-failover``) through the multi-queue
+runtime and reports per-phase throughput, per-queue telemetry, the
+packet-conservation audit, and the control-plane epoch log.  ``--hosts``
+lifts the run to the multi-host mesh data plane (``MeshDataplane``:
+cross-host RSS over global queue ids, per-host rings, epoch-barrier
+control fan-out); ``--policy`` installs a closed-loop routing policy
+(RETA rebalances land as audited ``ProgramReta`` epochs);
 ``--pipeline-depth`` overlaps dispatch/device/retire.  Host-simulated
 queues on CPU; device-spread via ``--fanout shard_map`` on real meshes.
 
     PYTHONPATH=src python -m repro.launch.dataplane --queues 4
     PYTHONPATH=src python -m repro.launch.dataplane \\
         --policy least-depth --scenario elephant-skew
+    PYTHONPATH=src python -m repro.launch.dataplane \\
+        --hosts 2 --scenario cascading-failover --audit
 """
 
 from __future__ import annotations
@@ -23,13 +28,16 @@ import jax
 
 from repro.control import make_policy
 from repro.core import executor
-from repro.dataplane import (DataplaneRuntime, make_scenario, play, render,
-                             scenarios)
+from repro.dataplane import (DataplaneRuntime, MeshDataplane, make_scenario,
+                             play, render, scenarios)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--queues", type=int, default=4)
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="mesh host shards (1 = single-host runtime)")
+    ap.add_argument("--queues", type=int, default=4,
+                    help="hardware queues per host")
     ap.add_argument("--slots", type=int, default=4,
                     help="resident bank size (models preloaded)")
     ap.add_argument("--strategy", default="fused",
@@ -41,7 +49,8 @@ def main(argv=None) -> None:
                     help="max rows drained per queue per tick")
     ap.add_argument("--ring-capacity", type=int, default=1024)
     ap.add_argument("--scenario", default="emergency",
-                    choices=["emergency", "elephant-skew"])
+                    choices=["emergency", "elephant-skew",
+                             "cascading-failover"])
     ap.add_argument("--policy", default=None,
                     choices=["static", "least-depth", "drop-rate"],
                     help="closed-loop routing policy (default: none)")
@@ -56,24 +65,34 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the full report as JSON")
     args = ap.parse_args(argv)
+    if args.hosts < 1:
+        ap.error("--hosts must be >= 1")
 
+    total_queues = args.hosts * args.queues
     print(f"== resident bank: {args.slots} slots (random init) ==")
     bank = executor.init_bank(jax.random.PRNGKey(args.seed), args.slots)
     phases = make_scenario(args.scenario, num_slots=args.slots,
-                           num_queues=args.queues, scale=args.scale)
+                           num_queues=args.queues, scale=args.scale,
+                           hosts=args.hosts)
     trace = render(phases, num_slots=args.slots, seed=args.seed,
-                   num_queues=args.queues)
+                   num_queues=total_queues)
     print(f"scenario: {args.scenario}, {len(phases)} phases, "
           f"{trace.total_packets} packets, seed={args.seed} (replayable)")
 
     policy = make_policy(args.policy) if args.policy else None
-    rt = DataplaneRuntime(
-        bank, num_queues=args.queues, strategy=args.strategy,
-        fanout=args.fanout, batch=args.batch,
-        ring_capacity=args.ring_capacity, audit=args.audit,
-        pipeline_depth=args.pipeline_depth, policy=policy)
-    print(f"runtime: {args.queues} queues x batch {args.batch}, "
-          f"strategy={args.strategy}, fanout={rt.fanout}, "
+    kw = dict(strategy=args.strategy, fanout=args.fanout, batch=args.batch,
+              ring_capacity=args.ring_capacity, audit=args.audit,
+              pipeline_depth=args.pipeline_depth, policy=policy)
+    if args.hosts > 1:
+        rt = MeshDataplane(bank, hosts=args.hosts, num_queues=args.queues,
+                           **kw)
+        shape = (f"{args.hosts} hosts x {args.queues} queues "
+                 f"({total_queues} global)")
+    else:
+        rt = DataplaneRuntime(bank, num_queues=args.queues, **kw)
+        shape = f"{args.queues} queues"
+    print(f"runtime: {shape} x batch {args.batch}, "
+          f"strategy={args.strategy}, "
           f"ring={args.ring_capacity}, depth={rt.pipeline_depth}, "
           f"policy={getattr(policy, 'name', None)}")
 
@@ -85,8 +104,11 @@ def main(argv=None) -> None:
               f"{r['dropped']:>9}{r['wrong_verdict']:>7}{r['kpps']:>10.1f}")
 
     snap = rt.snapshot()
+    qph = args.queues
     for q in snap["queues"]:
-        print(f"queue {q['queue']}: completed={q['completed']} "
+        label = (f"host {q['queue'] // qph} queue {q['queue'] % qph}"
+                 if args.hosts > 1 else f"queue {q['queue']}")
+        print(f"{label}: completed={q['completed']} "
               f"pps_busy={q['pps_busy']:.0f} "
               f"lat p50/p99/max={q['latency_p50_us']:.0f}/"
               f"{q['latency_p99_us']:.0f}/{q['latency_max_us']:.0f}us "
@@ -98,6 +120,12 @@ def main(argv=None) -> None:
           f"(+{aud['totals']['occupancy']} queued, "
           f"+{aud['totals']['in_flight']} in flight) "
           f"ok={aud['ok']} wrong_verdict={aud['wrong_verdict']}")
+    if args.hosts > 1:
+        for i, h in enumerate(aud["per_host"]):
+            t = h["totals"]
+            print(f"  host {i}: offered={t['offered']} "
+                  f"completed={t['completed']} dropped={t['dropped']} "
+                  f"ok={h['ok']}")
 
     log = rt.control.command_log()
     cont = rt.control.continuity_audit()
@@ -105,9 +133,11 @@ def main(argv=None) -> None:
           f"{len(log)} epoch(s) applied, continuity ok={cont['ok']}")
     for rec in log:
         cmds = ", ".join(c["cmd"] for c in rec["commands"])
+        barrier = (f" hosts@{rec['host_ticks']}"
+                   if rec.get("host_ticks") else "")
         print(f"  epoch {rec['epoch']:>3} @tick {rec['applied_tick']:<6} "
               f"[{cmds}] apply={rec['apply_us']:.0f}us "
-              f"latency={rec['apply_latency_us']:.0f}us")
+              f"latency={rec['apply_latency_us']:.0f}us{barrier}")
 
     if args.json:
         with open(args.json, "w") as f:
