@@ -1,0 +1,140 @@
+"""Fig. 11 (repo extension) — trace-driven workload engine.
+
+Three measurements over `repro.dataplane.workloads` (DESIGN.md §9):
+
+  * **regime sweep** — every generator regime synthesized into a
+    versioned trace and replayed through an audited runtime (mesh for
+    the host-addressed regimes): replay kpps per regime, plus an
+    ``expect=0`` wrong-verdict count and an ``expect=0`` invariant-
+    mismatch count per regime — the zero-wrong-verdict continuity claim
+    checked across the whole demand space, not just one storyline;
+  * **record -> replay bit-exactness** — a live emergency run recorded
+    through ``TraceRecorder``, saved, loaded, and replayed on a fresh
+    runtime: the verdict-stream digest and the raw per-queue
+    (seq, verdict, slot) streams must match bit-exactly (``expect=0``
+    mismatch count), the acceptance criterion of ISSUE 5;
+  * **trace codec cost** — save + load round-trip time and compressed
+    bytes-per-packet for a recorded trace (the control-channel cost of
+    shipping a scenario corpus around).
+
+Run standalone with ``--json BENCH_5.json`` for the machine-readable
+map, or through ``python -m benchmarks.run --only fig11``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):  # invoked as `python benchmarks/fig11_workloads.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(1, os.path.join(_root, "src"))
+
+import jax
+
+from benchmarks.common import emit, standalone_json_main
+from repro.core import executor
+from repro.dataplane import DataplaneRuntime, MeshDataplane, workloads
+from repro.dataplane.workloads import generators
+
+NUM_SLOTS = 2
+BATCH = 128
+
+#: regimes whose phases address hosts (global queue ids over 2 hosts)
+_MESH_REGIMES = ("cascading-failover", "chaos-host-failover")
+
+
+def _runtime_for(bank, regime: str):
+    kw = dict(batch=BATCH, ring_capacity=4096, record=True, audit=True)
+    if regime in _MESH_REGIMES:
+        return MeshDataplane(bank, hosts=2, num_queues=2, **kw), 2, 2
+    return DataplaneRuntime(bank, num_queues=4, **kw), 1, 4
+
+
+def bench_regime_sweep(bank):
+    """Synthesize + replay every regime; kpps and audit counters each."""
+    for regime in workloads.REGIME_NAMES:
+        hosts = 2 if regime in _MESH_REGIMES else 1
+        queues = 2 if regime in _MESH_REGIMES else 4
+        w = workloads.make_workload(
+            regime, num_slots=NUM_SLOTS, num_queues=queues, hosts=hosts,
+            # pin file-replay to the synthetic corpus: baselines must not
+            # depend on which file sets exist on the measuring machine
+            corpus_root=generators.SYNTHETIC_CORPUS)
+        trace = workloads.synthesize(
+            w.phases, num_slots=NUM_SLOTS, num_queues=hosts * queues,
+            seed=0, name=regime, payload_pool=w.payload_pool)
+        rt, _, _ = _runtime_for(bank, regime)
+        t0 = time.perf_counter()
+        rep = workloads.replay(trace, rt)
+        dt = time.perf_counter() - t0
+        done = rep["totals"]["completed"]
+        cont = rt.control.continuity_audit()
+        label = regime.replace("-", "_")
+        emit(f"fig11.{label}.kpps", done / dt / 1e3,
+             f"{done}/{trace.total_packets} pkts {hosts}h x {queues}q "
+             f"{len(rt.control.log)} epochs audited replay")
+        emit(f"fig11.audit.{label}.wrong_verdict",
+             rt.telemetry.wrong_verdict,
+             "expect=0: zero-wrong-verdict continuity under this regime")
+        bad = len(rep["mismatches"]) + (0 if cont["ok"] else 1)
+        emit(f"fig11.audit.{label}.invariant_mismatch", bad,
+             "expect=0: per-phase invariants + epoch continuity hold")
+        assert rt.telemetry.wrong_verdict == 0, regime
+        assert bad == 0, (regime, rep["mismatches"])
+
+
+def bench_record_replay(bank):
+    """Record a live run, save/load, replay: must be bit-exact."""
+    w = workloads.make_workload("emergency", num_slots=NUM_SLOTS,
+                                num_queues=4)
+    rendered = workloads.render(list(w.phases), num_slots=NUM_SLOTS,
+                                seed=7, num_queues=4)
+    rt = DataplaneRuntime(bank, num_queues=4, batch=BATCH,
+                          ring_capacity=2048, record=True)
+    rec = workloads.record(rt)
+    workloads.play(rec, rendered)
+    trace = rec.finish(name="emergency", seed=7)
+
+    path = os.path.join(tempfile.mkdtemp(prefix="fig11_"), "emergency.bswt")
+    t0 = time.perf_counter()
+    nbytes = workloads.save(trace, path)
+    save_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    loaded = workloads.load(path)
+    load_s = time.perf_counter() - t0
+    emit("fig11.trace.save_us", save_s * 1e6,
+         f"{nbytes} bytes, {trace.total_packets} pkts")
+    emit("fig11.trace.load_us", load_s * 1e6, "zlib+msgpack decode")
+    emit("fig11.trace.bytes_per_packet", nbytes / trace.total_packets,
+         "compressed trace size amortized")
+
+    rt2 = workloads.make_runtime(loaded)
+    rep = workloads.replay(loaded, rt2)
+    mismatch = len(rep["mismatches"])
+    mismatch += sum((
+        rep["digest_ok"] is not True,
+        rt2.completed_seq != rt.completed_seq,
+        rt2.completed_verdicts != rt.completed_verdicts,
+        rt2.completed_slots != rt.completed_slots,
+        sorted(rt2.dropped_seq) != sorted(rt.dropped_seq),
+    ))
+    emit("fig11.audit.record_replay_mismatch", mismatch,
+         "expect=0: replay of a recorded trace is bit-identical "
+         "(digest + raw per-queue seq/verdict/slot streams)")
+    assert mismatch == 0, rep["mismatches"]
+    os.unlink(path)
+
+
+def main():
+    bank = executor.init_bank(jax.random.PRNGKey(0), NUM_SLOTS)
+    bench_regime_sweep(bank)
+    bench_record_replay(bank)
+
+
+if __name__ == "__main__":
+    standalone_json_main(
+        main, "fig11: trace-driven workload engine (replay kpps + audits)")

@@ -7,6 +7,7 @@ import argparse
 import contextlib
 import io
 import json
+import os
 import statistics
 import sys
 import traceback
@@ -90,6 +91,42 @@ def compare_results(results: dict, baseline: dict,
     return regressions
 
 
+def write_step_summary(path: str, results: dict, baseline: dict,
+                       regressions: list[str], *, label: str,
+                       normalize: bool) -> None:
+    """Append a per-key comparison table (GitHub-flavored markdown) to
+    ``path`` — the ``$GITHUB_STEP_SUMMARY`` report CI publishes."""
+    shared = sorted(set(results) & set(baseline))
+    speed = _speed_factor(results, baseline, shared) if normalize else 1.0
+    flagged = {r.split(":", 1)[0] for r in regressions}
+    lines = [
+        f"### Benchmark comparison vs `{label}`",
+        "",
+        f"{len(shared)} shared keys, speed factor {speed:.2f}, "
+        f"{len(regressions)} regression(s)",
+        "",
+        "| key | baseline | current | Δ | |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for key in shared:
+        base, new = baseline[key], results[key]
+        if base > 0:
+            delta = (new / base - 1.0) * 100.0
+            delta_s = f"{delta:+.0f}%"
+        else:
+            delta_s = "=" if new == base else f"{new:.4g} vs 0"
+        good = _is_throughput(key)
+        mark = ("🔴" if key in flagged else
+                ("⚪" if ".audit." in key else
+                 ("🟢" if (base > 0 and ((new > base) == good or new == base))
+                  else "—")))
+        lines.append(f"| `{key}` | {base:.4g} | {new:.4g} "
+                     f"| {delta_s} | {mark} |")
+    lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -105,12 +142,16 @@ def main(argv=None) -> None:
                     help="divide out the median machine-speed factor before "
                          "thresholding (for baselines recorded on different "
                          "hardware, e.g. CI runners)")
+    ap.add_argument("--summary", metavar="PATH",
+                    default=os.environ.get("GITHUB_STEP_SUMMARY"),
+                    help="append a markdown per-key comparison table here "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig4_runtime, fig5_scaling, fig6_slot_behavior,
                             fig7_fused, fig8_dataplane, fig9_control,
-                            fig10_mesh, roofline, table4_continuity,
-                            table5_controlplane)
+                            fig10_mesh, fig11_workloads, roofline,
+                            table4_continuity, table5_controlplane)
 
     benches = [
         ("fig4", fig4_runtime.main),
@@ -120,6 +161,7 @@ def main(argv=None) -> None:
         ("fig8", fig8_dataplane.main),
         ("fig9", fig9_control.main),
         ("fig10", fig10_mesh.main),
+        ("fig11", fig11_workloads.main),
         ("table4", table4_continuity.main),
         ("table5", table5_controlplane.main),
         ("roofline", roofline.main),
@@ -164,6 +206,10 @@ def main(argv=None) -> None:
               f"{len(regressions)} regression(s)", file=sys.stderr)
         for r in regressions:
             print(f"# REGRESSION {r}", file=sys.stderr)
+        if args.summary:
+            write_step_summary(args.summary, results, baseline, regressions,
+                               label=args.compare,
+                               normalize=args.compare_normalize)
         if regressions:
             sys.exit(2)
     if failures:

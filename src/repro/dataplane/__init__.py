@@ -7,15 +7,18 @@ fused forwarding program out across queues (loop / vmap / shard_map)
 behind an epoch-stamped control plane (`repro.control`), ``mesh`` lifts
 the runtime to a multi-host mesh (per-host shards, cross-host RSS,
 epoch-barrier control fan-out), ``telemetry`` exports per-queue counters
-with a mesh-wide ``merge``, and ``scenarios`` generates phased emergency
-traffic — rendered as command scripts — to drive it all.
+with a mesh-wide ``merge``, and ``workloads`` generates phased emergency
+traffic — rendered as command scripts, recordable and bit-exactly
+replayable as versioned traces — to drive it all (``scenarios`` is its
+compatibility shim).
 """
 
 from repro.dataplane.ring import PacketRing, RingCounters  # noqa: F401
 from repro.dataplane.runtime import DataplaneRuntime, queue_mesh  # noqa: F401
 from repro.dataplane.mesh import MeshDataplane  # noqa: F401
-from repro.dataplane.scenarios import (  # noqa: F401
-    Phase, ScenarioTrace, cascading_failover_phases, elephant_skew_phases,
-    emergency_phases, make_scenario, phase_commands, play, render, SEQ_WORD,
+from repro.dataplane.workloads import (  # noqa: F401
+    ChaosEvent, Phase, ScenarioTrace, WorkloadTrace,
+    cascading_failover_phases, elephant_skew_phases, emergency_phases,
+    make_scenario, make_workload, phase_commands, play, render, SEQ_WORD,
 )
-from repro.dataplane import rss, telemetry  # noqa: F401
+from repro.dataplane import rss, scenarios, telemetry, workloads  # noqa: F401

@@ -63,7 +63,7 @@ from repro.control import policy as policy_mod
 from repro.core import bank as bank_lib, pipeline
 from repro.dataplane import rss
 from repro.dataplane.ring import PacketRing
-from repro.dataplane.scenarios import SEQ_WORD
+from repro.dataplane.workloads.phases import SEQ_WORD
 from repro.dataplane.telemetry import Telemetry
 from repro.launch import mesh as mesh_lib
 

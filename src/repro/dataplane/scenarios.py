@@ -1,358 +1,18 @@
-"""Emergency-scenario traffic engine: phased, replayable packet workloads.
+"""Compatibility shim: the traffic engine moved to `repro.dataplane.workloads`.
 
-Emergency communications traffic is not a steady stream — the FENIX /
-Emergency-HRL line of work stresses exactly the regimes a disaster
-produces: a calm baseline, a *flash crowd* when everyone transmits at
-once, *link failover* when infrastructure dies and surviving queues absorb
-remapped flows, and *slot churn* while operators push updated models into
-the resident bank mid-event.  This module emits those regimes as
-deterministic, replayable traces:
-
-* a ``Phase`` describes one regime: ticks, burst size (arrival rate), the
-  number of active flows (few elephant flows during a flash crowd, many
-  mice in steady state), the slot mix the traffic selects, queues that
-  fail at phase entry, and an optional resident-slot swap;
-* ``render`` expands phases into per-tick packet bursts.  Every packet
-  carries its flow tuple in reg0 words 4..7 (RSS input) and a globally
-  monotonic sequence stamp in word 15, so conservation and per-queue
-  ordering are checkable after the fact;
-* ``phase_commands`` renders a phase's entry events (failover, restore,
-  slot swap) as a typed control-plane command script — one atomic epoch;
-* ``play`` drives a ``DataplaneRuntime`` through a rendered trace,
-  submitting each phase's command script through ``runtime.control`` and
-  returning per-phase reports (completed, dropped, wrong verdicts,
-  throughput).
-
-Same phases + same seed -> byte-identical trace, always.
+The phased-scenario core (``Phase``/``render``/``play``), the regime
+generators, and the trace machinery now live in the workloads package
+(DESIGN.md §9); every public name this module used to export resolves to
+the same object there.  New code should import from
+``repro.dataplane.workloads`` — this module exists so pre-workloads call
+sites (``from repro.dataplane import scenarios``) keep working unchanged.
 """
 
-from __future__ import annotations
-
-import dataclasses
-import time
-
-import jax
-import numpy as np
-
-from repro.control import FailQueues, RestoreQueues, SwapSlot
-from repro.core import executor, packet as pkt
-from repro.dataplane import rss
-
-# reg0 spare word 15: globally monotonic emission sequence number.
-SEQ_WORD = 15
-
-
-@dataclasses.dataclass(frozen=True)
-class Phase:
-    name: str
-    ticks: int
-    burst: int                      # packets per tick (arrival rate)
-    flows: int                      # active flow count
-    slot_mix: tuple[float, ...]     # per-slot selection probabilities
-    failed_queues: tuple[int, ...] = ()   # queues that die at phase entry
-    swap_slot: int | None = None    # resident slot replaced at phase entry
-    monitor_frac: float = 0.0       # fraction sent with the monitor-only bit
-    # elephant-flow skew: the first ``elephant_flows`` flows are forced
-    # (by rejection-sampling their flow tuples against the default RETA)
-    # to hash onto ``elephant_queue`` and carry ``elephant_frac`` of the
-    # phase's packets — a few heavy flows crushing one queue.
-    elephant_flows: int = 0
-    elephant_queue: int | None = None
-    elephant_frac: float = 0.0
-
-
-def emergency_phases(num_slots: int, *, scale: int = 1) -> list[Phase]:
-    """The canonical 4-phase emergency storyline (steady -> flash crowd ->
-    link failover -> slot-churn recovery)."""
-    uniform = tuple(1.0 / num_slots for _ in range(num_slots))
-    # flash crowd: traffic collapses onto slot 0 (the triage model)
-    crowd = tuple(0.7 if i == 0 else 0.3 / max(num_slots - 1, 1)
-                  for i in range(num_slots))
-    # recovery: the updated model (slot 1 if present) takes over
-    churn_slot = 1 % num_slots
-    recovery = tuple(0.6 if i == churn_slot else 0.4 / max(num_slots - 1, 1)
-                     for i in range(num_slots))
-    return [
-        Phase("steady", ticks=8, burst=128 * scale, flows=64,
-              slot_mix=uniform),
-        Phase("flash_crowd", ticks=8, burst=512 * scale, flows=8,
-              slot_mix=crowd, monitor_frac=0.1),
-        Phase("link_failover", ticks=8, burst=256 * scale, flows=64,
-              slot_mix=uniform, failed_queues=(0,)),
-        Phase("slot_churn", ticks=8, burst=128 * scale, flows=64,
-              slot_mix=recovery, swap_slot=churn_slot),
-    ]
-
-
-def elephant_skew_phases(
-    num_slots: int,
-    num_queues: int,
-    *,
-    scale: int = 1,
-    ticks: int = 12,
-    elephant_queue: int = 0,
-) -> list[Phase]:
-    """Elephant-flow skew: a few heavy flows all hash to one queue.
-
-    A short uniform warmup, then a sustained phase where 4 elephant
-    flows (rejection-sampled to land on ``elephant_queue`` under the
-    default RETA) carry ~85% of a burst sized well above one queue's
-    drain rate — the canonical imbalance a static RETA cannot fix and an
-    adaptive policy must.  Used by the policy tests and fig9.
-    """
-    uniform = tuple(1.0 / num_slots for _ in range(num_slots))
-    return [
-        Phase("warmup", ticks=2, burst=64 * scale, flows=32,
-              slot_mix=uniform),
-        Phase("skew", ticks=ticks, burst=256 * scale, flows=32,
-              slot_mix=uniform, elephant_flows=4,
-              elephant_queue=elephant_queue, elephant_frac=0.85),
-    ]
-
-
-def cascading_failover_phases(
-    num_slots: int,
-    *,
-    hosts: int,
-    queues_per_host: int,
-    scale: int = 1,
-) -> list[Phase]:
-    """Cascading host failover at mesh scale, in global queue ids.
-
-    The mesh storyline the ROADMAP's multi-host items call for: a steady
-    baseline, then an entire host dies at once (all of its queues fail,
-    so its RETA buckets remap across the surviving hosts), then a second
-    host *degrades* under the absorbed load (half its queues fail on
-    top), then service restores with a slot swap — composed entirely
-    from the existing typed commands via ``phase_commands``.  On a
-    1-host mesh it degenerates to a two-queue cascade (needs >= 3
-    queues so a survivor remains).
-    """
-    total = hosts * queues_per_host
-    uniform = tuple(1.0 / num_slots for _ in range(num_slots))
-    if hosts > 1:
-        dead_host = tuple(range(queues_per_host))            # host 0, entirely
-        degraded = tuple(queues_per_host + q                 # half of host 1
-                         for q in range((queues_per_host + 1) // 2))
-    else:
-        dead_host, degraded = (0,), (1,)
-    if total - len(dead_host) - len(degraded) < 1:
-        raise ValueError(
-            "cascading failover would leave zero live (host, queue) pairs; "
-            "add hosts or queues")
-    return [
-        Phase("steady", ticks=6, burst=128 * scale, flows=64,
-              slot_mix=uniform),
-        Phase("host_down", ticks=6, burst=192 * scale, flows=64,
-              slot_mix=uniform, failed_queues=dead_host),
-        Phase("cascade", ticks=6, burst=192 * scale, flows=64,
-              slot_mix=uniform, failed_queues=dead_host + degraded),
-        Phase("recovery", ticks=6, burst=128 * scale, flows=64,
-              slot_mix=uniform, swap_slot=1 % num_slots),
-    ]
-
-
-def make_scenario(name: str, *, num_slots: int, num_queues: int,
-                  scale: int = 1, hosts: int = 1) -> list[Phase]:
-    """CLI registry: scenario name -> phase list.
-
-    ``num_queues`` is per host; queue-addressed phase fields (failed
-    queues, elephant pinning) are in global ids over ``hosts *
-    num_queues``.
-    """
-    total = hosts * num_queues
-    if name == "emergency":
-        return emergency_phases(num_slots, scale=scale)
-    if name == "elephant-skew":
-        return elephant_skew_phases(num_slots, total, scale=scale)
-    if name == "cascading-failover":
-        return cascading_failover_phases(
-            num_slots, hosts=hosts, queues_per_host=num_queues, scale=scale)
-    raise ValueError(
-        f"unknown scenario {name!r} (known: ['emergency', 'elephant-skew', "
-        "'cascading-failover'])")
-
-
-@dataclasses.dataclass
-class ScenarioTrace:
-    phases: list[Phase]
-    bursts: list[list[np.ndarray]]  # bursts[i][t] = (burst, 272) uint32
-    seed: int
-
-    @property
-    def total_packets(self) -> int:
-        return sum(b.shape[0] for ph in self.bursts for b in ph)
-
-
-def _sample_slots(rng, mix: tuple[float, ...], n: int) -> np.ndarray:
-    p = np.asarray(mix, np.float64)
-    return rng.choice(len(p), size=n, p=p / p.sum())
-
-
-def _elephant_flow_words(rng, n: int, num_queues: int, queue: int) -> np.ndarray:
-    """Rejection-sample ``n`` flow tuples that hash to ``queue`` under the
-    default RETA (deterministic in the rng state)."""
-    reta = rss.indirection_table(num_queues)
-    out = np.empty((n, rss.FLOW_WORDS), np.uint32)
-    filled = 0
-    while filled < n:
-        cand = rng.integers(0, 2**32,
-                            (64 * num_queues, rss.FLOW_WORDS), dtype=np.uint32)
-        h = rss.toeplitz_hash(cand)
-        hits = cand[reta[rss.bucket_index(h, len(reta))] == queue]
-        take = min(hits.shape[0], n - filled)
-        out[filled : filled + take] = hits[:take]
-        filled += take
-    return out
-
-
-def _sample_flows(rng, phase: Phase) -> np.ndarray:
-    """Per-packet flow index; elephants carry ``elephant_frac`` of them."""
-    if not phase.elephant_flows or phase.elephant_frac <= 0:
-        return rng.integers(0, phase.flows, phase.burst)
-    heavy = rng.random(phase.burst) < phase.elephant_frac
-    elephants = rng.integers(0, phase.elephant_flows, phase.burst)
-    mice = rng.integers(phase.elephant_flows, phase.flows, phase.burst)
-    return np.where(heavy, elephants, mice)
-
-
-def render(
-    phases: list[Phase],
-    *,
-    num_slots: int,
-    seed: int = 0,
-    payload_pool: np.ndarray | None = None,
-    num_queues: int | None = None,
-) -> ScenarioTrace:
-    """Expand phases into per-tick packet bursts (deterministic in seed).
-
-    ``payload_pool`` (N, 256) uint32 reuses real payloads round-robin per
-    flow; default is random payloads drawn per flow so a flow's packets
-    are self-similar (same flow tuple, correlated payloads).
-    """
-    rng = np.random.default_rng(seed)
-    seq = 0
-    bursts: list[list[np.ndarray]] = []
-    for phase in phases:
-        if len(phase.slot_mix) != num_slots:
-            raise ValueError(
-                f"phase {phase.name!r}: slot_mix has {len(phase.slot_mix)} "
-                f"entries for {num_slots} slots")
-        flow_words = rng.integers(
-            0, 2**32, (phase.flows, rss.FLOW_WORDS), dtype=np.uint32)
-        if phase.elephant_flows and phase.elephant_queue is not None:
-            if num_queues is None:
-                raise ValueError(
-                    f"phase {phase.name!r} pins elephant flows to a queue; "
-                    "render(..., num_queues=...) is required")
-            if not 0 <= phase.elephant_queue < num_queues:
-                raise ValueError(
-                    f"phase {phase.name!r}: elephant_queue "
-                    f"{phase.elephant_queue} out of range for "
-                    f"{num_queues} queues")  # rejection sampling would spin
-            if phase.elephant_flows >= phase.flows:
-                raise ValueError(
-                    f"phase {phase.name!r}: needs elephant_flows "
-                    f"({phase.elephant_flows}) < flows ({phase.flows}) "
-                    "so mice flows exist")
-            flow_words[: phase.elephant_flows] = _elephant_flow_words(
-                rng, phase.elephant_flows, num_queues, phase.elephant_queue)
-        if payload_pool is None:
-            flow_payload = rng.integers(
-                0, 2**32, (phase.flows, pkt.PAYLOAD_WORDS), dtype=np.uint32)
-        else:
-            flow_payload = payload_pool[
-                rng.integers(0, payload_pool.shape[0], phase.flows)]
-        phase_bursts = []
-        for _ in range(phase.ticks):
-            fidx = _sample_flows(rng, phase)
-            slots = _sample_slots(rng, phase.slot_mix, phase.burst)
-            # payload: the flow's base payload with a per-packet twist so
-            # verdicts are not constant within a flow
-            payload = flow_payload[fidx].copy()
-            payload[:, 0] ^= rng.integers(
-                0, 2**32, phase.burst, dtype=np.uint32)
-            control = np.where(
-                rng.random(phase.burst) < phase.monitor_frac,
-                int(pkt.CTRL_MONITOR_ONLY), 0)
-            rows = pkt.make_packets(slots, payload)
-            rows[:, pkt.CONTROL_WORD_LO] = control.astype(np.uint32)
-            rows[:, rss.FLOW_WORD_LO : rss.FLOW_WORD_LO + rss.FLOW_WORDS] = \
-                flow_words[fidx]
-            rows[:, SEQ_WORD] = np.arange(seq, seq + phase.burst,
-                                          dtype=np.uint32)
-            seq += phase.burst
-            phase_bursts.append(rows)
-        bursts.append(phase_bursts)
-    return ScenarioTrace(phases=phases, bursts=bursts, seed=seed)
-
-
-def default_swap_delivery(slot: int, cfg=executor.H32):
-    """Freshly 'delivered' replacement weights for ``slot`` (deterministic)."""
-    return executor.init_params(jax.random.PRNGKey(10_000 + slot), cfg)
-
-
-def phase_commands(
-    phase: Phase,
-    *,
-    num_queues: int,
-    swap_delivery=default_swap_delivery,
-) -> list:
-    """A phase's entry events as a typed control-plane command script.
-
-    One atomic epoch: ``failed_queues`` becomes a ``FailQueues`` command
-    (RETA failover remap), phases without failures restore full service
-    (``RestoreQueues``), and ``swap_slot`` ships delivered weights as a
-    ``SwapSlot`` command.  A failover that would leave zero live queues
-    is unservable — traffic stays where it is (the 1-queue degenerate
-    case), expressed as a plain restore.
-    """
-    failed = tuple(q for q in phase.failed_queues if q < num_queues)
-    if failed and set(failed) != set(range(num_queues)):
-        cmds = [FailQueues(failed)]
-    else:
-        cmds = [RestoreQueues()]
-    if phase.swap_slot is not None:
-        cmds.append(SwapSlot(phase.swap_slot, swap_delivery(phase.swap_slot)))
-    return cmds
-
-
-def play(
-    runtime,
-    trace: ScenarioTrace,
-    *,
-    swap_delivery=default_swap_delivery,
-) -> list[dict]:
-    """Drive a runtime through a rendered trace; per-phase reports.
-
-    Each phase's entry events are submitted as one command epoch through
-    ``runtime.control``; the runtime makes them effective at the next
-    tick boundary (the first dispatch of the phase).  Each burst is
-    dispatched then ticked once; the backlog drains inside the phase so
-    phase reports are self-contained.
-    """
-    reports = []
-    for phase, phase_bursts in zip(trace.phases, trace.bursts):
-        runtime.control.submit(*phase_commands(
-            phase, num_queues=runtime.num_queues,
-            swap_delivery=swap_delivery))
-        before = runtime.audit_conservation()["totals"]
-        wrong0 = runtime.telemetry.wrong_verdict
-        t0 = time.perf_counter()
-        for burst in phase_bursts:
-            runtime.dispatch(burst)
-            runtime.tick()
-        runtime.drain()
-        dt = time.perf_counter() - t0
-        after = runtime.audit_conservation()["totals"]
-        completed = after["completed"] - before["completed"]
-        reports.append({
-            "phase": phase.name,
-            "offered": after["offered"] - before["offered"],
-            "completed": completed,
-            "dropped": after["dropped"] - before["dropped"],
-            "wrong_verdict": runtime.telemetry.wrong_verdict - wrong0,
-            "elapsed_s": dt,
-            "kpps": completed / dt / 1e3 if dt > 0 else float("nan"),
-        })
-    return reports
+from repro.dataplane.workloads.generators import (  # noqa: F401
+    cascading_failover_phases, elephant_skew_phases, emergency_phases,
+    make_scenario,
+)
+from repro.dataplane.workloads.phases import (  # noqa: F401
+    SEQ_WORD, ChaosEvent, Phase, ScenarioTrace, default_swap_delivery,
+    phase_commands, play, render,
+)

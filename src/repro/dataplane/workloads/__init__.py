@@ -1,0 +1,26 @@
+"""Trace-driven workload engine (DESIGN.md §9).
+
+Subsumes the old ``repro.dataplane.scenarios`` module: ``phases`` holds
+the ``Phase``/``render``/``play`` kernel (now with first-class chaos
+events), ``generators`` the parameterized regime library and its
+registry, and ``trace`` the versioned recordable/replayable trace format
+(``record`` from any live run, bit-exact ``replay`` through a runtime or
+mesh, ``synthesize`` straight from generator phases).
+"""
+
+from repro.dataplane.workloads.generators import (  # noqa: F401
+    REGIME_NAMES, Workload, cascading_failover_phases,
+    chaos_host_failover_phases, chaos_queue_surge_phases, diurnal_phases,
+    elephant_skew_phases, emergency_phases, file_corpus, file_replay_workload,
+    flash_crowd_phases, make_scenario, make_workload, slot_thrash_phases,
+)
+from repro.dataplane.workloads.phases import (  # noqa: F401
+    SEQ_WORD, ChaosEvent, Phase, ScenarioTrace, chaos_by_tick,
+    default_swap_delivery, materialize_command, phase_command_specs,
+    phase_commands, play, render,
+)
+from repro.dataplane.workloads.trace import (  # noqa: F401
+    INVARIANT_KEYS, TRACE_VERSION, PackedLeaves, TraceRecorder,
+    WorkloadTrace, digest, load, make_runtime, record, replay, restore_bank,
+    runtime_meta, save, synthesize,
+)

@@ -1,0 +1,598 @@
+"""Versioned, compressed workload traces: record any run, replay bit-exactly.
+
+A ``WorkloadTrace`` is the unit the whole workload subsystem trades in —
+the recorded/replayed demand evidence the Emergency-HRL and INSIGHT
+evaluations are built on, instead of synthetic phases alone.  It is an
+ordered **step stream** plus expectations:
+
+* ``{"kind": "burst"}``     — one arrival burst (B, 272) uint32 packet rows;
+* ``{"kind": "tick"}``      — one runtime tick (the dispatch/tick
+  interleaving is part of the recording: ring backpressure, drops, and
+  pipeline behavior depend on it, so replay preserves it exactly);
+* ``{"kind": "commands"}``  — one atomic control epoch of typed commands
+  (the command timeline: phase entries AND chaos events, in submission
+  order relative to the packet steps around them);
+* ``{"kind": "drain"}``     — drain-to-empty (deterministic given the
+  steps before it);
+* ``{"kind": "phase"}``     — a phase boundary marker carrying the
+  *expected per-phase invariants* (offered/completed/dropped/
+  wrong_verdict) observed at record time, checked at replay time.
+
+Trace-level ``expect`` adds end-of-run totals and a SHA-256 **digest**
+over the completed per-queue (seq, verdict, slot) streams and the
+dropped-seq stream — the bit-exactness witness: a replay that reproduces
+the digest reproduced every verdict, in order, on the same queue.
+
+On disk: ``MAGIC + version byte + zlib(msgpack(doc))``.  Packet arrays
+are raw little-endian bytes; ``SwapSlot`` weight payloads are stored as
+flattened leaves and re-assembled against the replaying runtime's bank
+treedef (the structures are identical by the control plane's own
+validation); ``SetPolicy`` stores the policy's registry name.  Loading
+rejects unknown magic/version instead of guessing.
+
+``record()``/``TraceRecorder`` capture from ANY live run by wrapping the
+runtime (single-host or mesh) in a same-API facade; ``replay()`` feeds a
+trace back through a runtime and verifies the invariants.  ``synthesize``
+builds a trace straight from generator phases without running anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import zlib
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.control import (FailQueues, ProgramReta, RestoreQueues, SetPolicy,
+                           SwapSlot, make_policy)
+from repro.control import policy as policy_mod
+from repro.core import executor
+from repro.dataplane.workloads.phases import (ScenarioTrace, chaos_by_tick,
+                                              default_swap_delivery,
+                                              materialize_command,
+                                              phase_command_specs, render)
+
+MAGIC = b"BSWTRACE"
+TRACE_VERSION = 1
+
+#: per-phase / end-of-run counter keys compared between record and replay
+#: (timing keys like elapsed_s/kpps are machine-dependent and never stored)
+INVARIANT_KEYS = ("offered", "completed", "dropped", "wrong_verdict")
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLeaves:
+    """Flattened ``SwapSlot`` weight payload as loaded from disk; replay
+    re-assembles it with the target runtime's bank treedef."""
+    leaves: tuple
+
+
+@dataclasses.dataclass
+class WorkloadTrace:
+    """Versioned step stream + expectations (+ optionally the initial bank,
+    so a saved trace replays standalone, bit-exactly)."""
+    meta: dict
+    steps: list[dict]
+    expect: dict = dataclasses.field(default_factory=dict)
+    bank_leaves: tuple | None = None
+
+    @property
+    def total_packets(self) -> int:
+        return sum(s["rows"].shape[0] for s in self.steps
+                   if s["kind"] == "burst")
+
+    def command_timeline(self) -> list[tuple[int, tuple]]:
+        """(step index, commands) for every epoch in the trace."""
+        return [(i, s["commands"]) for i, s in enumerate(self.steps)
+                if s["kind"] == "commands"]
+
+
+# ---------------------------------------------------------------------------
+# runtime introspection helpers (single-host runtime and mesh facade)
+# ---------------------------------------------------------------------------
+
+def _bank_of(rt):
+    return rt.bank if hasattr(rt, "bank") else rt.shards[0].bank
+
+
+def _set_bank(rt, bank) -> None:
+    """Install the recorded initial bank before replay starts (pre-run
+    initialization, not a runtime mutation — no packets are in flight)."""
+    if hasattr(rt, "bank"):
+        rt.bank = bank
+    else:
+        for s in rt.shards:
+            s.bank = bank
+
+
+def _records(rt) -> bool:
+    shard = rt if hasattr(rt, "_record") else rt.shards[0]
+    return bool(shard._record)
+
+
+def _template(rt):
+    return rt if hasattr(rt, "batch") else rt.shards[0]
+
+
+def _policy_name(policy) -> str | None:
+    """Registry name of an installed policy — or raise: a policy the
+    registry cannot rebuild would make the trace silently unreplayable
+    (its rebalance epochs regenerate from the replaying runtime's own
+    policy loop, so the replay MUST install the same policy)."""
+    if policy is None:
+        return None
+    name = getattr(policy, "name", None)
+    if name is None or name not in policy_mod.POLICIES:
+        raise ValueError(
+            f"cannot record a run with non-registry policy {policy!r}; "
+            "give it a `name` listed in repro.control.policy.POLICIES")
+    return name
+
+
+def runtime_meta(rt) -> dict:
+    """The runtime shape a trace was recorded against (what a replay must
+    reconstruct for bit-exactness)."""
+    t = _template(rt)
+    return {
+        "hosts": getattr(rt, "hosts", 1),
+        "queues_per_host": (rt.num_queues_per_host
+                            if hasattr(rt, "num_queues_per_host")
+                            else rt.num_queues),
+        "num_slots": t.num_slots,
+        "strategy": t.strategy,
+        "batch": t.batch,
+        "ring_capacity": t.rings[0].capacity,
+        "pipeline_depth": t.pipeline_depth,
+        # policies live at facade scope on a mesh, runtime scope otherwise;
+        # their ProgramReta epochs are NOT in the recorded command timeline
+        # (they regenerate deterministically from telemetry), so the replay
+        # runtime must run the same policy
+        "policy": _policy_name(getattr(rt, "policy", None)),
+    }
+
+
+def digest(rt) -> dict:
+    """SHA-256 over the completed per-queue (seq, verdict, slot) streams
+    and the dropped-seq stream — requires a ``record=True`` runtime."""
+    h = hashlib.sha256()
+    for q in range(len(rt.completed_seq)):
+        h.update(np.asarray(rt.completed_seq[q], np.int64).tobytes())
+        h.update(np.asarray(rt.completed_verdicts[q], np.uint8).tobytes())
+        h.update(np.asarray(rt.completed_slots[q], np.int64).tobytes())
+        h.update(b"|")
+    h.update(np.asarray(sorted(rt.dropped_seq), np.int64).tobytes())
+    return {"sha256": h.hexdigest(),
+            "completed": int(sum(len(s) for s in rt.completed_seq)),
+            "dropped": int(len(rt.dropped_seq))}
+
+
+# ---------------------------------------------------------------------------
+# synthesize: generator phases -> trace (no runtime involved)
+# ---------------------------------------------------------------------------
+
+def synthesize(
+    phases,
+    *,
+    num_slots: int,
+    num_queues: int,
+    seed: int = 0,
+    name: str = "synthesized",
+    payload_pool: np.ndarray | None = None,
+) -> WorkloadTrace:
+    """Render phases into a step-stream trace without running a runtime.
+
+    ``num_queues`` is the *global* queue count (hosts x per-host).  The
+    command timeline uses command specs (``SwapSlot`` payloads stay
+    ``None`` and are materialized deterministically at replay), phase
+    markers carry the statically-known invariants (offered count, zero
+    wrong verdicts); completion/drop counts are runtime-shape-dependent
+    and omitted.
+    """
+    rendered: ScenarioTrace = render(
+        list(phases), num_slots=num_slots, seed=seed,
+        payload_pool=payload_pool, num_queues=num_queues)
+    steps: list[dict] = []
+    for phase, phase_bursts in zip(rendered.phases, rendered.bursts):
+        steps.append({"kind": "commands", "commands": tuple(
+            phase_command_specs(phase, num_queues=num_queues))})
+        chaos = chaos_by_tick(phase)
+        offered = 0
+        for t, burst in enumerate(phase_bursts):
+            for ev in chaos.get(t, ()):
+                steps.append({"kind": "commands",
+                              "commands": tuple(ev.commands)})
+            steps.append({"kind": "burst", "rows": burst})
+            steps.append({"kind": "tick"})
+            offered += int(burst.shape[0])
+        steps.append({"kind": "drain"})
+        steps.append({"kind": "phase", "name": phase.name,
+                      "expect": {"offered": offered, "wrong_verdict": 0}})
+    return WorkloadTrace(
+        meta={"version": TRACE_VERSION, "name": name, "seed": seed,
+              "num_slots": num_slots, "num_queues": num_queues,
+              "kind": "synthesized"},
+        steps=steps,
+        expect={"totals": {"offered": rendered.total_packets,
+                           "wrong_verdict": 0}},
+    )
+
+
+# ---------------------------------------------------------------------------
+# record: wrap any live runtime in a same-API recording facade
+# ---------------------------------------------------------------------------
+
+class _RecordingControl:
+    """``runtime.control`` proxy that logs every submitted epoch as a
+    commands step at its position in the step stream."""
+
+    def __init__(self, inner, recorder):
+        self._inner = inner
+        self._recorder = recorder
+
+    def submit(self, *commands):
+        self._recorder._log({"kind": "commands", "commands": tuple(commands)})
+        return self._inner.submit(*commands)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+class TraceRecorder:
+    """Same-API facade over a runtime (or mesh) that records the step
+    stream flowing through it.  Drive it with ``play`` or any custom
+    loop, then ``finish()`` the trace:
+
+        rec = TraceRecorder(runtime)
+        play(rec, rendered)
+        trace = rec.finish(name="emergency")
+        save(trace, "emergency.bswt")
+
+    The initial bank is captured at construction (JAX arrays are
+    immutable, so the reference stays the pre-run value even across
+    ``SwapSlot`` epochs).
+    """
+
+    def __init__(self, runtime):
+        self._rt = runtime
+        self.steps: list[dict] = []
+        self.control = _RecordingControl(runtime.control, self)
+        self._bank0 = _bank_of(runtime)
+        self._mark_totals = None
+        self._mark_wrong = 0
+
+    def _log(self, step: dict) -> None:
+        self.steps.append(step)
+
+    # -- recorded data-plane surface ----------------------------------------
+
+    def dispatch(self, packets_np, now=None, **kw):
+        self._log({"kind": "burst",
+                   "rows": np.array(packets_np, np.uint32, copy=True)})
+        return self._rt.dispatch(packets_np, now=now, **kw)
+
+    def tick(self):
+        self._log({"kind": "tick"})
+        return self._rt.tick()
+
+    def drain(self, *args, **kw):
+        self._log({"kind": "drain"})
+        return self._rt.drain(*args, **kw)
+
+    def mark_phase(self, name: str, report: dict | None = None) -> None:
+        """Record a phase boundary with the invariants observed since the
+        previous mark (``play`` calls this automatically)."""
+        totals = self._rt.audit_conservation()["totals"]
+        wrong = self._rt.telemetry.wrong_verdict
+        if report is not None:
+            expect = {k: int(report[k]) for k in INVARIANT_KEYS}
+        else:
+            prev = self._mark_totals or {k: 0 for k in totals}
+            expect = {k: int(totals[k] - prev[k])
+                      for k in ("offered", "completed", "dropped")}
+            expect["wrong_verdict"] = int(wrong - self._mark_wrong)
+        self._mark_totals = dict(totals)
+        self._mark_wrong = wrong
+        self._log({"kind": "phase", "name": name, "expect": expect})
+
+    def __getattr__(self, name):
+        return getattr(self._rt, name)
+
+    # -- finalization --------------------------------------------------------
+
+    def finish(self, *, name: str = "recorded", seed: int | None = None,
+               include_bank: bool = True) -> WorkloadTrace:
+        self._rt.retire_all()
+        totals = self._rt.audit_conservation()["totals"]
+        expect = {"totals": {k: int(totals[k]) for k in
+                             ("offered", "completed", "dropped")}}
+        expect["totals"]["wrong_verdict"] = int(
+            self._rt.telemetry.wrong_verdict)
+        if _records(self._rt):
+            expect["digest"] = digest(self._rt)
+        meta = {"version": TRACE_VERSION, "name": name, "seed": seed,
+                "kind": "recorded", **runtime_meta(self._rt)}
+        meta["num_queues"] = meta["hosts"] * meta["queues_per_host"]
+        bank = None
+        if include_bank:
+            bank = tuple(np.asarray(leaf) for leaf in
+                         jax.tree_util.tree_leaves(self._bank0))
+        return WorkloadTrace(meta=meta, steps=list(self.steps),
+                             expect=expect, bank_leaves=bank)
+
+
+def record(runtime) -> TraceRecorder:
+    """Wrap ``runtime`` for recording — alias kept verb-shaped so call
+    sites read ``rec = record(rt); play(rec, trace); rec.finish()``."""
+    return TraceRecorder(runtime)
+
+
+# ---------------------------------------------------------------------------
+# replay: trace -> runtime, invariants checked
+# ---------------------------------------------------------------------------
+
+def _unpack_params(params, rt):
+    treedef = jax.tree_util.tree_structure(_bank_of(rt))
+    import jax.numpy as jnp
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(leaf) for leaf in params.leaves])
+
+
+def _replay_command(cmd, rt, swap_delivery):
+    if isinstance(cmd, SwapSlot) and isinstance(cmd.params, PackedLeaves):
+        return dataclasses.replace(cmd, params=_unpack_params(cmd.params, rt))
+    if isinstance(cmd, SetPolicy) and isinstance(cmd.policy, str):
+        return dataclasses.replace(cmd, policy=make_policy(cmd.policy))
+    return materialize_command(cmd, swap_delivery)
+
+
+def restore_bank(trace: WorkloadTrace, template_bank):
+    """Re-assemble the trace's recorded initial bank against a structural
+    template (any bank of the same config)."""
+    if trace.bank_leaves is None:
+        return None
+    import jax.numpy as jnp
+    treedef = jax.tree_util.tree_structure(template_bank)
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(leaf) for leaf in trace.bank_leaves])
+
+
+def make_runtime(trace: WorkloadTrace, *, bank=None, audit: bool = False,
+                 **overrides):
+    """Build the runtime a trace expects: shape from ``trace.meta``, the
+    recorded initial bank when the trace carries one (else ``bank``, else
+    a fresh seeded bank), ``record=True`` so the digest is checkable."""
+    from repro.dataplane.mesh import MeshDataplane
+    from repro.dataplane.runtime import DataplaneRuntime
+
+    meta = trace.meta
+    num_slots = int(meta.get("num_slots") or 4)
+    if bank is None:
+        bank = executor.init_bank(
+            jax.random.PRNGKey(int(meta.get("seed") or 0)), num_slots)
+    restored = restore_bank(trace, bank)
+    if restored is not None:
+        bank = restored
+    kw = dict(strategy=meta.get("strategy", "fused"),
+              batch=int(meta.get("batch", 128)),
+              ring_capacity=int(meta.get("ring_capacity", 2048)),
+              pipeline_depth=int(meta.get("pipeline_depth", 1)),
+              policy=(make_policy(meta["policy"])
+                      if meta.get("policy") else None),
+              record=True, audit=audit)
+    kw.update(overrides)
+    hosts = int(meta.get("hosts", 1))
+    queues = int(meta.get("queues_per_host")
+                 or meta.get("num_queues", 4) // hosts)
+    if hosts > 1:
+        return MeshDataplane(bank, hosts=hosts, num_queues=queues, **kw)
+    return DataplaneRuntime(bank, num_queues=queues, **kw)
+
+
+def replay(
+    trace: WorkloadTrace,
+    runtime,
+    *,
+    swap_delivery=default_swap_delivery,
+    strict: bool = False,
+    install_bank: bool = True,
+) -> dict:
+    """Feed a trace's step stream through ``runtime`` and verify it.
+
+    Returns ``{"ok", "mismatches", "phases", "digest", "digest_ok"}``:
+    per-phase reports with every invariant the trace carries checked,
+    plus the end-of-run totals and (for recorded traces replayed on a
+    ``record=True`` runtime) the bit-exactness digest.  ``strict=True``
+    raises on the first mismatch instead of collecting them.
+    """
+    if install_bank and trace.bank_leaves is not None:
+        _set_bank(runtime, restore_bank(trace, _bank_of(runtime)))
+    mismatches: list[str] = []
+    phases: list[dict] = []
+    prev_totals: dict | None = None
+    prev_wrong = runtime.telemetry.wrong_verdict
+
+    def check(label: str, expect: dict | None, got: dict) -> None:
+        for key, want in (expect or {}).items():
+            if key in got and int(got[key]) != int(want):
+                mismatches.append(
+                    f"{label}: {key} = {got[key]} != recorded {want}")
+                if strict:
+                    raise AssertionError(mismatches[-1])
+
+    for step in trace.steps:
+        kind = step["kind"]
+        if kind == "burst":
+            runtime.dispatch(step["rows"])
+        elif kind == "tick":
+            runtime.tick()
+        elif kind == "drain":
+            runtime.drain()
+        elif kind == "commands":
+            runtime.control.submit(*(
+                _replay_command(c, runtime, swap_delivery)
+                for c in step["commands"]))
+        elif kind == "phase":
+            totals = runtime.audit_conservation()["totals"]
+            wrong = runtime.telemetry.wrong_verdict
+            prev = prev_totals or {k: 0 for k in totals}
+            got = {k: int(totals[k] - prev[k])
+                   for k in ("offered", "completed", "dropped")}
+            got["wrong_verdict"] = int(wrong - prev_wrong)
+            prev_totals, prev_wrong = dict(totals), wrong
+            check(f"phase {step['name']!r}", step.get("expect"), got)
+            phases.append({"phase": step["name"], **got})
+        else:
+            raise ValueError(f"unknown trace step kind {kind!r}")
+    if not trace.steps or trace.steps[-1]["kind"] not in ("drain", "phase"):
+        runtime.drain()
+    runtime.retire_all()
+
+    totals = runtime.audit_conservation()["totals"]
+    got_totals = {k: int(totals[k]) for k in
+                  ("offered", "completed", "dropped")}
+    got_totals["wrong_verdict"] = int(runtime.telemetry.wrong_verdict)
+    check("totals", trace.expect.get("totals"), got_totals)
+
+    dig, dig_ok = None, None
+    if _records(runtime):
+        dig = digest(runtime)
+        want = trace.expect.get("digest")
+        if want is not None:
+            dig_ok = dig["sha256"] == want["sha256"]
+            if not dig_ok:
+                mismatches.append(
+                    f"digest: {dig['sha256'][:16]}... != recorded "
+                    f"{want['sha256'][:16]}... (verdict streams diverged)")
+                if strict:
+                    raise AssertionError(mismatches[-1])
+    return {"ok": not mismatches, "mismatches": mismatches,
+            "phases": phases, "totals": got_totals,
+            "digest": dig, "digest_ok": dig_ok}
+
+
+# ---------------------------------------------------------------------------
+# on-disk codec
+# ---------------------------------------------------------------------------
+
+def _enc_nd(a: np.ndarray) -> dict:
+    a = np.ascontiguousarray(a)
+    return {"dt": str(a.dtype), "sh": list(a.shape),
+            "b": a.astype(a.dtype.newbyteorder("<"), copy=False).tobytes()}
+
+
+def _dec_nd(d: dict) -> np.ndarray:
+    a = np.frombuffer(d["b"], dtype=np.dtype(d["dt"]).newbyteorder("<"))
+    return a.reshape(d["sh"]).astype(np.dtype(d["dt"]), copy=False)
+
+
+def _enc_cmd(cmd) -> dict:
+    if isinstance(cmd, SwapSlot):
+        if cmd.params is None:
+            leaves = None
+        elif isinstance(cmd.params, PackedLeaves):
+            leaves = [_enc_nd(leaf) for leaf in cmd.params.leaves]
+        else:
+            leaves = [_enc_nd(np.asarray(leaf)) for leaf in
+                      jax.tree_util.tree_leaves(cmd.params)]
+        return {"c": "swap", "slot": int(cmd.slot), "leaves": leaves}
+    if isinstance(cmd, ProgramReta):
+        return {"c": "reta", "reta": [int(q) for q in cmd.reta]}
+    if isinstance(cmd, FailQueues):
+        return {"c": "fail", "queues": [int(q) for q in cmd.queues]}
+    if isinstance(cmd, RestoreQueues):
+        return {"c": "restore", "queues": [int(q) for q in cmd.queues]}
+    if isinstance(cmd, SetPolicy):
+        name = (cmd.policy if isinstance(cmd.policy, str)
+                else _policy_name(cmd.policy))
+        return {"c": "policy", "name": name}
+    raise TypeError(f"cannot serialize command {cmd!r}")
+
+
+def _dec_cmd(d: dict):
+    kind = d["c"]
+    if kind == "swap":
+        params = (None if d["leaves"] is None else
+                  PackedLeaves(tuple(_dec_nd(x) for x in d["leaves"])))
+        return SwapSlot(int(d["slot"]), params)
+    if kind == "reta":
+        return ProgramReta(tuple(d["reta"]))
+    if kind == "fail":
+        return FailQueues(tuple(d["queues"]))
+    if kind == "restore":
+        return RestoreQueues(tuple(d["queues"]))
+    if kind == "policy":
+        return SetPolicy(d["name"])
+    raise ValueError(f"unknown serialized command kind {kind!r}")
+
+
+def _enc_step(step: dict) -> dict:
+    kind = step["kind"]
+    if kind == "burst":
+        return {"k": "b", "rows": _enc_nd(step["rows"])}
+    if kind == "tick":
+        return {"k": "t"}
+    if kind == "drain":
+        return {"k": "d"}
+    if kind == "commands":
+        return {"k": "c", "cmds": [_enc_cmd(c) for c in step["commands"]]}
+    if kind == "phase":
+        return {"k": "p", "name": step["name"],
+                "expect": step.get("expect")}
+    raise ValueError(f"unknown trace step kind {kind!r}")
+
+
+def _dec_step(d: dict) -> dict:
+    kind = d["k"]
+    if kind == "b":
+        return {"kind": "burst", "rows": _dec_nd(d["rows"])}
+    if kind == "t":
+        return {"kind": "tick"}
+    if kind == "d":
+        return {"kind": "drain"}
+    if kind == "c":
+        return {"kind": "commands",
+                "commands": tuple(_dec_cmd(c) for c in d["cmds"])}
+    if kind == "p":
+        return {"kind": "phase", "name": d["name"], "expect": d["expect"]}
+    raise ValueError(f"unknown serialized step kind {kind!r}")
+
+
+def save(trace: WorkloadTrace, path: str) -> int:
+    """Write ``MAGIC + version + zlib(msgpack(doc))``; returns bytes written."""
+    doc = {
+        "meta": dict(trace.meta, version=TRACE_VERSION),
+        "steps": [_enc_step(s) for s in trace.steps],
+        "expect": trace.expect,
+        "bank": (None if trace.bank_leaves is None else
+                 [_enc_nd(np.asarray(leaf)) for leaf in trace.bank_leaves]),
+    }
+    blob = MAGIC + bytes([TRACE_VERSION]) + zlib.compress(
+        msgpack.packb(doc, use_bin_type=True), 6)
+    with open(path, "wb") as f:
+        f.write(blob)
+    return len(blob)
+
+
+def load(path: str) -> WorkloadTrace:
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[: len(MAGIC)] != MAGIC:
+        raise ValueError(f"{path}: not a workload trace (bad magic)")
+    version = blob[len(MAGIC)]
+    if version != TRACE_VERSION:
+        raise ValueError(
+            f"{path}: trace version {version} unsupported "
+            f"(this build reads v{TRACE_VERSION})")
+    doc = msgpack.unpackb(zlib.decompress(blob[len(MAGIC) + 1:]),
+                          raw=False, strict_map_key=False)
+    bank = doc.get("bank")
+    return WorkloadTrace(
+        meta=doc["meta"],
+        steps=[_dec_step(s) for s in doc["steps"]],
+        expect=doc.get("expect") or {},
+        bank_leaves=(None if bank is None else
+                     tuple(_dec_nd(x) for x in bank)),
+    )

@@ -1,21 +1,30 @@
 """Multi-queue data-plane driver: RSS -> rings -> sharded fused workers.
 
-Runs a scenario from the traffic engine (``--scenario emergency`` |
-``elephant-skew`` | ``cascading-failover``) through the multi-queue
-runtime and reports per-phase throughput, per-queue telemetry, the
-packet-conservation audit, and the control-plane epoch log.  ``--hosts``
-lifts the run to the multi-host mesh data plane (``MeshDataplane``:
-cross-host RSS over global queue ids, per-host rings, epoch-barrier
-control fan-out); ``--policy`` installs a closed-loop routing policy
-(RETA rebalances land as audited ``ProgramReta`` epochs);
-``--pipeline-depth`` overlaps dispatch/device/retire.  Host-simulated
-queues on CPU; device-spread via ``--fanout shard_map`` on real meshes.
+Runs a workload regime from the trace-driven engine (``--scenario``
+names any regime in `repro.dataplane.workloads.REGIME_NAMES`: the
+emergency storyline, elephant skew, cascading failover, diurnal load,
+flash-crowd surge, adversarial slot thrash, chaos regimes, recorded-file
+replay) through the multi-queue runtime and reports per-phase
+throughput, per-queue telemetry, the packet-conservation audit, and the
+control-plane epoch log.  ``--hosts`` lifts the run to the multi-host
+mesh data plane; ``--policy`` installs a closed-loop routing policy;
+``--pipeline-depth`` overlaps dispatch/device/retire.
+
+``--trace record PATH`` records the run — packet batches, typed command
+timeline (chaos events included), per-phase invariants, and the initial
+bank — as a versioned compressed trace; ``--trace replay PATH`` replays
+a recorded trace bit-exactly (verdict-stream digest checked) through a
+runtime rebuilt from the trace's own metadata.
 
     PYTHONPATH=src python -m repro.launch.dataplane --queues 4
     PYTHONPATH=src python -m repro.launch.dataplane \\
         --policy least-depth --scenario elephant-skew
     PYTHONPATH=src python -m repro.launch.dataplane \\
-        --hosts 2 --scenario cascading-failover --audit
+        --hosts 2 --scenario chaos-host-failover --audit
+    PYTHONPATH=src python -m repro.launch.dataplane \\
+        --scenario diurnal --trace record /tmp/diurnal.bswt
+    PYTHONPATH=src python -m repro.launch.dataplane \\
+        --trace replay /tmp/diurnal.bswt --audit
 """
 
 from __future__ import annotations
@@ -28,8 +37,91 @@ import jax
 
 from repro.control import make_policy
 from repro.core import executor
-from repro.dataplane import (DataplaneRuntime, MeshDataplane, make_scenario,
-                             play, render, scenarios)
+from repro.dataplane import DataplaneRuntime, MeshDataplane, workloads
+
+
+def _print_run_report(rt, reports, hosts: int, queues_per_host: int) -> dict:
+    """Shared tail of both the play and replay paths: per-phase table,
+    telemetry, conservation, epoch log.  Returns the snapshot."""
+    print(f"{'phase':<16}{'offered':>9}{'done':>9}{'dropped':>9}"
+          f"{'wrong':>7}{'kpps':>10}")
+    for r in reports:
+        kpps = r.get("kpps")
+        print(f"{r['phase']:<16}{r['offered']:>9}{r['completed']:>9}"
+              f"{r['dropped']:>9}{r['wrong_verdict']:>7}"
+              + (f"{kpps:>10.1f}" if kpps is not None else f"{'-':>10}"))
+
+    snap = rt.snapshot()
+    for q in snap["queues"]:
+        label = (f"host {q['queue'] // queues_per_host} "
+                 f"queue {q['queue'] % queues_per_host}"
+                 if hosts > 1 else f"queue {q['queue']}")
+        print(f"{label}: completed={q['completed']} "
+              f"pps_busy={q['pps_busy']:.0f} "
+              f"lat p50/p99/max={q['latency_p50_us']:.0f}/"
+              f"{q['latency_p99_us']:.0f}/{q['latency_max_us']:.0f}us "
+              f"per_slot={q['per_slot_total']}")
+    aud = snap["conservation"]
+    print(f"conservation: offered={aud['totals']['offered']} = "
+          f"completed={aud['totals']['completed']} + "
+          f"dropped={aud['totals']['dropped']} "
+          f"(+{aud['totals']['occupancy']} queued, "
+          f"+{aud['totals']['in_flight']} in flight) "
+          f"ok={aud['ok']} wrong_verdict={aud['wrong_verdict']}")
+    if hosts > 1:
+        for i, h in enumerate(aud["per_host"]):
+            t = h["totals"]
+            print(f"  host {i}: offered={t['offered']} "
+                  f"completed={t['completed']} dropped={t['dropped']} "
+                  f"ok={h['ok']}")
+
+    log = rt.control.command_log()
+    cont = rt.control.continuity_audit()
+    print(f"control: api_v{rt.control.API_VERSION}, "
+          f"{len(log)} epoch(s) applied, continuity ok={cont['ok']}")
+    for rec in log:
+        cmds = ", ".join(c["cmd"] for c in rec["commands"])
+        barrier = (f" hosts@{rec['host_ticks']}"
+                   if rec.get("host_ticks") else "")
+        print(f"  epoch {rec['epoch']:>3} @tick {rec['applied_tick']:<6} "
+              f"[{cmds}] apply={rec['apply_us']:.0f}us "
+              f"latency={rec['apply_latency_us']:.0f}us{barrier}")
+    snap["control_log"] = log
+    snap["continuity"] = cont
+    return snap
+
+
+def _replay_main(args) -> None:
+    """``--trace replay PATH``: runtime shape comes from the trace."""
+    trace = workloads.load(args.trace[1])
+    meta = trace.meta
+    hosts = int(meta.get("hosts", 1))
+    queues = int(meta.get("queues_per_host", args.queues))
+    print(f"replaying {args.trace[1]}: trace v{meta['version']} "
+          f"{meta.get('name')!r} ({meta.get('kind', 'recorded')}), "
+          f"{trace.total_packets} packets, "
+          f"{len(trace.command_timeline())} command epoch(s), "
+          f"{hosts} host(s) x {queues} queue(s)")
+    rt = workloads.make_runtime(trace, audit=args.audit)
+    rep = workloads.replay(trace, rt)
+    snap = _print_run_report(rt, rep["phases"], hosts, queues)
+    dig = rep["digest"]
+    print(f"replay: ok={rep['ok']} digest_ok={rep['digest_ok']}"
+          + (f" sha256={dig['sha256'][:16]}..." if dig else ""))
+    for m in rep["mismatches"]:
+        print(f"  MISMATCH {m}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"replay": {k: rep[k] for k in
+                                  ("ok", "mismatches", "phases", "totals",
+                                   "digest", "digest_ok")},
+                       "snapshot": snap}, f, indent=2, default=str)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    aud = snap["conservation"]
+    if (not rep["ok"] or rep["digest_ok"] is False or not aud["ok"]
+            or aud["wrong_verdict"] or not snap["continuity"]["ok"]):
+        sys.exit(1)
 
 
 def main(argv=None) -> None:
@@ -49,8 +141,8 @@ def main(argv=None) -> None:
                     help="max rows drained per queue per tick")
     ap.add_argument("--ring-capacity", type=int, default=1024)
     ap.add_argument("--scenario", default="emergency",
-                    choices=["emergency", "elephant-skew",
-                             "cascading-failover"])
+                    choices=list(workloads.REGIME_NAMES),
+                    help="workload regime from the generator library")
     ap.add_argument("--policy", default=None,
                     choices=["static", "least-depth", "drop-rate"],
                     help="closed-loop routing policy (default: none)")
@@ -62,27 +154,43 @@ def main(argv=None) -> None:
     ap.add_argument("--audit", action="store_true",
                     help="re-score every tick through the exact take path "
                          "and count wrong verdicts")
+    ap.add_argument("--trace", nargs=2, metavar=("MODE", "PATH"),
+                    default=None,
+                    help="'record PATH' saves this run as a replayable "
+                         "trace; 'replay PATH' replays a recorded trace "
+                         "(runtime shape from the trace itself)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the full report as JSON")
     args = ap.parse_args(argv)
     if args.hosts < 1:
         ap.error("--hosts must be >= 1")
+    if args.trace and args.trace[0] not in ("record", "replay"):
+        ap.error("--trace MODE must be 'record' or 'replay'")
+
+    if args.trace and args.trace[0] == "replay":
+        _replay_main(args)
+        return
 
     total_queues = args.hosts * args.queues
     print(f"== resident bank: {args.slots} slots (random init) ==")
     bank = executor.init_bank(jax.random.PRNGKey(args.seed), args.slots)
-    phases = make_scenario(args.scenario, num_slots=args.slots,
-                           num_queues=args.queues, scale=args.scale,
-                           hosts=args.hosts)
-    trace = render(phases, num_slots=args.slots, seed=args.seed,
-                   num_queues=total_queues)
-    print(f"scenario: {args.scenario}, {len(phases)} phases, "
-          f"{trace.total_packets} packets, seed={args.seed} (replayable)")
+    workload = workloads.make_workload(
+        args.scenario, num_slots=args.slots, num_queues=args.queues,
+        scale=args.scale, hosts=args.hosts)
+    trace = workloads.render(
+        list(workload.phases), num_slots=args.slots, seed=args.seed,
+        num_queues=total_queues, payload_pool=workload.payload_pool)
+    chaos_epochs = sum(len(p.chaos) for p in workload.phases)
+    print(f"scenario: {args.scenario}, {len(workload.phases)} phases, "
+          f"{trace.total_packets} packets, {chaos_epochs} chaos event(s), "
+          f"seed={args.seed} (replayable)")
 
     policy = make_policy(args.policy) if args.policy else None
+    recording = bool(args.trace)
     kw = dict(strategy=args.strategy, fanout=args.fanout, batch=args.batch,
               ring_capacity=args.ring_capacity, audit=args.audit,
-              pipeline_depth=args.pipeline_depth, policy=policy)
+              pipeline_depth=args.pipeline_depth, policy=policy,
+              record=recording)
     if args.hosts > 1:
         rt = MeshDataplane(bank, hosts=args.hosts, num_queues=args.queues,
                            **kw)
@@ -96,56 +204,27 @@ def main(argv=None) -> None:
           f"ring={args.ring_capacity}, depth={rt.pipeline_depth}, "
           f"policy={getattr(policy, 'name', None)}")
 
-    reports = play(rt, trace, swap_delivery=scenarios.default_swap_delivery)
-    print(f"{'phase':<16}{'offered':>9}{'done':>9}{'dropped':>9}"
-          f"{'wrong':>7}{'kpps':>10}")
-    for r in reports:
-        print(f"{r['phase']:<16}{r['offered']:>9}{r['completed']:>9}"
-              f"{r['dropped']:>9}{r['wrong_verdict']:>7}{r['kpps']:>10.1f}")
+    driver = workloads.record(rt) if recording else rt
+    reports = workloads.play(driver, trace)
+    snap = _print_run_report(rt, reports, args.hosts, args.queues)
 
-    snap = rt.snapshot()
-    qph = args.queues
-    for q in snap["queues"]:
-        label = (f"host {q['queue'] // qph} queue {q['queue'] % qph}"
-                 if args.hosts > 1 else f"queue {q['queue']}")
-        print(f"{label}: completed={q['completed']} "
-              f"pps_busy={q['pps_busy']:.0f} "
-              f"lat p50/p99/max={q['latency_p50_us']:.0f}/"
-              f"{q['latency_p99_us']:.0f}/{q['latency_max_us']:.0f}us "
-              f"per_slot={q['per_slot_total']}")
-    aud = snap["conservation"]
-    print(f"conservation: offered={aud['totals']['offered']} = "
-          f"completed={aud['totals']['completed']} + "
-          f"dropped={aud['totals']['dropped']} "
-          f"(+{aud['totals']['occupancy']} queued, "
-          f"+{aud['totals']['in_flight']} in flight) "
-          f"ok={aud['ok']} wrong_verdict={aud['wrong_verdict']}")
-    if args.hosts > 1:
-        for i, h in enumerate(aud["per_host"]):
-            t = h["totals"]
-            print(f"  host {i}: offered={t['offered']} "
-                  f"completed={t['completed']} dropped={t['dropped']} "
-                  f"ok={h['ok']}")
-
-    log = rt.control.command_log()
-    cont = rt.control.continuity_audit()
-    print(f"control: api_v{rt.control.API_VERSION}, "
-          f"{len(log)} epoch(s) applied, continuity ok={cont['ok']}")
-    for rec in log:
-        cmds = ", ".join(c["cmd"] for c in rec["commands"])
-        barrier = (f" hosts@{rec['host_ticks']}"
-                   if rec.get("host_ticks") else "")
-        print(f"  epoch {rec['epoch']:>3} @tick {rec['applied_tick']:<6} "
-              f"[{cmds}] apply={rec['apply_us']:.0f}us "
-              f"latency={rec['apply_latency_us']:.0f}us{barrier}")
+    if recording:
+        saved = driver.finish(name=args.scenario, seed=args.seed)
+        nbytes = workloads.save(saved, args.trace[1])
+        print(f"recorded trace: {len(saved.steps)} steps, "
+              f"{saved.total_packets} packets, "
+              f"digest={'yes' if 'digest' in saved.expect else 'no'} "
+              f"-> {args.trace[1]} ({nbytes} bytes)")
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"phases": reports, "snapshot": snap,
-                       "control_log": log, "continuity": cont}, f, indent=2)
+                       "control_log": snap["control_log"],
+                       "continuity": snap["continuity"]}, f, indent=2)
             f.write("\n")
         print(f"wrote {args.json}")
-    if not aud["ok"] or aud["wrong_verdict"] or not cont["ok"]:
+    aud = snap["conservation"]
+    if not aud["ok"] or aud["wrong_verdict"] or not snap["continuity"]["ok"]:
         sys.exit(1)
 
 
