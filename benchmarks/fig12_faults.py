@@ -1,0 +1,147 @@
+"""Fig. 12 (repo extension) — fault-tolerant epoch barriers.
+
+Runs the canonical one-fault ``demo_plan`` for every fault class
+(DESIGN.md §10) on a 2-host audited mesh with a 4-tick lease and
+measures, per class:
+
+  * **detect_ticks** — ticks from fault onset to the health monitor's
+    first transition away from HEALTHY for the victim host;
+  * **failover_latency_ticks** — ticks from that detection to the
+    synthesized ``FailQueues`` failover epoch committing (0 when the
+    class resolves without failover, e.g. shard errors -> rollback);
+  * **packets_at_risk** — peak packets stranded on a non-live host
+    (queued + in flight) at any tick boundary during the run;
+
+plus the structural ``expect=0`` audits: zero wrong verdicts across
+every epoch window (degraded commits included), zero epochs whose
+outcome is not exactly one of {atomic, degraded, rollback}, and a zero
+mesh-wide conservation gap with stranded packets accounted.
+
+All fig12 metrics are tick counts or packet counts — deterministic in
+the plan and seed, so the CI guard compares them raw (no machine-speed
+normalization applies, but none is needed).
+
+Run standalone with ``--json BENCH_6.json`` or through
+``python -m benchmarks.run --only fig12``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):  # invoked as `python benchmarks/fig12_faults.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(1, os.path.join(_root, "src"))
+
+import jax
+
+from benchmarks.common import emit, standalone_json_main
+from repro.control import SwapSlot
+from repro.core import executor
+from repro.dataplane import MeshDataplane, Phase, faults, render, scenarios
+
+NUM_SLOTS = 4
+HOSTS = 2
+QUEUES = 2
+LEASE = 4
+TICKS = 20
+FAULT_TICK = 6
+
+
+def _drive(mesh, bursts):
+    """Dispatch + tick through ``bursts`` with a SwapSlot epoch every
+    third tick (so commits land while the fault is live), sampling the
+    peak stranded-packet count at every tick boundary."""
+    at_risk = 0
+    for t, burst in enumerate(bursts):
+        if t % 3 == 1:
+            slot = (t // 3) % NUM_SLOTS
+            mesh.control.submit(
+                SwapSlot(slot, scenarios.default_swap_delivery(slot)))
+        mesh.dispatch(burst)
+        mesh.tick()
+        stranded = mesh.audit_conservation().get("stranded")
+        if stranded:
+            at_risk = max(at_risk, stranded["packets"])
+    mesh.drain()
+    return at_risk
+
+
+def _outcome_violations(log) -> int:
+    """Epochs that did not end in exactly one of the three legal
+    outcomes: atomic commit, degraded quorum commit, atomic rollback."""
+    bad = 0
+    for rec in log:
+        mode = rec.commit_mode
+        if mode not in ("atomic", "degraded", "rollback"):
+            bad += 1
+        elif (mode == "rollback") != (rec.error is not None):
+            bad += 1
+    return bad
+
+
+def bench_fault_class(bank, bursts, kind: str):
+    plan = faults.demo_plan(kind, hosts=HOSTS, lease_ticks=LEASE,
+                            at_tick=FAULT_TICK)
+    mesh = MeshDataplane(bank, hosts=HOSTS, num_queues=QUEUES, batch=128,
+                         ring_capacity=4096, audit=True, record=True,
+                         lease_ticks=LEASE,
+                         fault_injector=faults.FaultInjector(plan))
+    at_risk = _drive(mesh, bursts)
+
+    trans = mesh.health.transitions
+    detect = next((t.tick for t in trans
+                   if t.frm == "healthy" and t.to != "healthy"), None)
+    onset = min(f.at_tick for f in plan.faults)
+    emit(f"fig12.{kind}.detect_ticks",
+         0 if detect is None else detect - onset,
+         f"fault @tick {onset}, lease={LEASE}"
+         + ("" if detect is not None else " (no health impact)"))
+
+    failover_lat = 0
+    if mesh.failover_epochs:
+        first = mesh.failover_epochs[0]
+        rec = next(r for r in mesh.control.log if r.epoch == first)
+        failover_lat = rec.applied_tick - (detect
+                                           if detect is not None
+                                           else FAULT_TICK)
+    emit(f"fig12.{kind}.failover_latency_ticks", failover_lat,
+         f"{len(mesh.failover_epochs)} failover epoch(s) synthesized")
+    emit(f"fig12.{kind}.packets_at_risk", at_risk,
+         "peak packets stranded on a non-live host")
+
+    cont = mesh.control.continuity_audit()
+    aud = mesh.audit_conservation()
+    t = aud["totals"]
+    # totals already count dead-host queues/in-flight; "stranded" is the
+    # informational subset of those sitting on non-live hosts
+    gap = (t["offered"] - t["completed"] - t["dropped"]
+           - t["occupancy"] - t["in_flight"])
+    emit(f"fig12.audit.{kind}.wrong_verdict", cont["wrong_verdict_total"],
+         f"expect=0 across {len(cont['epochs'])} epochs "
+         f"(modes {cont['commit_modes']})")
+    emit(f"fig12.audit.{kind}.outcome_violations",
+         _outcome_violations(mesh.control.log),
+         "expect=0: every epoch atomic, degraded, or rolled back")
+    emit(f"fig12.audit.{kind}.conservation_gap", gap,
+         "expect=0: mesh-wide conservation incl. stranded")
+    assert cont["ok"], cont
+    assert aud["ok"], aud
+    assert gap == 0
+
+
+def main():
+    bank = executor.init_bank(jax.random.PRNGKey(0), NUM_SLOTS)
+    uniform = (1.0 / NUM_SLOTS,) * NUM_SLOTS
+    trace = render(
+        [Phase("drive", ticks=TICKS, burst=96, flows=24, slot_mix=uniform)],
+        num_slots=NUM_SLOTS, seed=0, num_queues=HOSTS * QUEUES)
+    bursts = trace.bursts[0]
+    for kind in faults.FAULT_CLASSES:
+        bench_fault_class(bank, bursts, kind)
+
+
+if __name__ == "__main__":
+    standalone_json_main(main, __doc__)

@@ -10,7 +10,13 @@ from repro.control.commands import (  # noqa: F401
     API_VERSION, Command, FailQueues, ProgramReta, RestoreQueues, SetPolicy,
     SwapSlot,
 )
-from repro.control.plane import ControlPlane, EpochRecord  # noqa: F401
+from repro.control.health import (  # noqa: F401
+    HealthMonitor, HostState, Transition,
+)
+from repro.control.plane import (  # noqa: F401
+    COMMIT_MODES, ControlPlane, EpochRecord, NonFatalControlError,
+    load_epoch_spill,
+)
 from repro.control.policy import (  # noqa: F401
     POLICIES, DropRateRebalance, LeastDepth, PolicyView, RoutingPolicy,
     StaticReta, make_policy,

@@ -36,7 +36,12 @@ import numpy as np
 #: *global* queue ids on mesh runtimes (``host * Q + queue``, host-major
 #: — see ``rss.global_queue_id``), epochs commit under a cross-host
 #: apply-tick barrier, and the log records per-host apply ticks.
-API_VERSION = 2
+#: v3: fault-tolerant barriers — every epoch records a ``commit_mode``
+#: (atomic | degraded | rollback), a quorum of live hosts may commit
+#: while lease-expired hosts are failed over via synthesized
+#: ``FailQueues`` epochs, and non-fatal (injected/quorum) failures roll
+#: back without aborting the run.
+API_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)

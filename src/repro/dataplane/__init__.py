@@ -10,12 +10,20 @@ epoch-barrier control fan-out), ``telemetry`` exports per-queue counters
 with a mesh-wide ``merge``, and ``workloads`` generates phased emergency
 traffic — rendered as command scripts, recordable and bit-exactly
 replayable as versioned traces — to drive it all (``scenarios`` is its
-compatibility shim).
+compatibility shim).  ``faults`` injects typed, deterministic failures
+(stalls, crashes, shard errors, lost acks, delayed retires) at named
+points in both runtimes; `repro.control.health` turns the resulting
+missed ticks into lease expiry, and the mesh commits degraded over a
+quorum instead of stalling (DESIGN.md §10).
 """
 
 from repro.dataplane.ring import PacketRing, RingCounters  # noqa: F401
 from repro.dataplane.runtime import DataplaneRuntime, queue_mesh  # noqa: F401
-from repro.dataplane.mesh import MeshDataplane  # noqa: F401
+from repro.dataplane.mesh import MeshDataplane, QuorumLost  # noqa: F401
+from repro.dataplane.faults import (  # noqa: F401
+    CrashHost, DelayRetire, DropAck, FaultInjector, FaultPlan, InjectedFault,
+    ShardError, StallHost, demo_plan, load_plan, random_plan, save_plan,
+)
 from repro.dataplane.workloads import (  # noqa: F401
     ChaosEvent, Phase, ScenarioTrace, WorkloadTrace,
     cascading_failover_phases, elephant_skew_phases, emergency_phases,

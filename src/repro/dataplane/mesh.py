@@ -39,20 +39,49 @@ stamped with ``host_ticks`` — the per-host apply tick, all equal — and
 the epoch log, ``continuity_audit()``, and the ``RoutingPolicy`` loop
 (fed by mesh-merged telemetry and global-id views) work unchanged at
 mesh scale.
+
+**Fault-tolerant barriers (DESIGN.md §10).**  The barrier above would
+stall the whole mesh forever on one dead host; emergency networks make
+that the normal case, not the exception.  Each host therefore holds a
+tick-granularity *lease* (`repro.control.health.HealthMonitor`): serving
+a tick heartbeats it, failing to — unresponsive, or blocking a pending
+epoch barrier — burns it.  A straggler defers the barrier (bounded:
+every deferred tick is a missed lease tick) until its lease expires and
+it is declared DEAD, at which point the mesh synthesizes a ``FailQueues``
+failover epoch for the dead host's global queue ids and commits pending
+epochs *degraded* — a quorum of live, acked hosts instead of all hosts
+(``commit_mode`` records which; losing quorum itself rolls the epoch
+back atomically).  Dead hosts are re-probed with exponential backoff;
+a host that answers is resynced (bank + RETA projection from a live
+host, stale in-flight retired) before its queues are restored, so
+packets stranded in its rings drain instead of vanishing — the
+conservation audit counts them (``stranded``) while it is down.  Faults
+are injected deterministically at named points by
+`repro.dataplane.faults.FaultInjector`; without one armed the mesh
+behaves exactly as before and the all-equal barrier stamp stays a hard
+invariant.
 """
 
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
 
-from repro.control import (ControlPlane, FailQueues, ProgramReta,
+from repro.control import (ControlPlane, FailQueues, HealthMonitor,
+                           HostState, NonFatalControlError, ProgramReta,
                            RestoreQueues, SetPolicy, SwapSlot)
 from repro.dataplane import rss
 from repro.dataplane import runtime as runtime_mod
 from repro.dataplane import telemetry as telemetry_mod
 from repro.dataplane.runtime import DataplaneRuntime
+
+
+class QuorumLost(NonFatalControlError):
+    """Fewer live hosts acked a commit than the configured quorum: the
+    epoch rolls back atomically and the run continues (non-fatal — a
+    partitioned mesh refusing to commit is an outcome, not a bug)."""
 
 
 class _MeshCounters:
@@ -68,6 +97,7 @@ class _MeshCounters:
         self._shards = shards
         self.slot_swaps = 0
         self.reta_updates = 0
+        self.degraded_commits = 0
 
     @property
     def wrong_verdict(self) -> int:
@@ -87,7 +117,10 @@ class MeshDataplane:
     """
 
     def __init__(self, bank, *, hosts: int, num_queues: int,
-                 policy=None, **runtime_kw):
+                 policy=None, fault_injector=None, lease_ticks: int = 8,
+                 suspect_after: int = 2, quorum: int | None = None,
+                 log_capacity: int | None = None,
+                 log_spill: str | None = None, **runtime_kw):
         if hosts < 1:
             raise ValueError("need at least one host")
         self.hosts = int(hosts)
@@ -107,9 +140,55 @@ class MeshDataplane:
         self.bucket_load = np.zeros(len(self.reta), np.int64)
         self.policy = policy
         self.telemetry = _MeshCounters(self.shards)
-        self.control = ControlPlane(self)
+        self.control = ControlPlane(self, log_capacity=log_capacity,
+                                    spill_path=log_spill)
+        self._faults = fault_injector
+        self.lease_ticks = int(lease_ticks)
+        self.quorum = (int(quorum) if quorum is not None
+                       else math.ceil(self.hosts / 2))
+        if not 1 <= self.quorum <= self.hosts:
+            raise ValueError(f"quorum must be in [1, {self.hosts}]")
+        self.health = HealthMonitor(self.hosts, lease_ticks=self.lease_ticks,
+                                    suspect_after=suspect_after)
+        # hosts whose queues the mesh itself failed over (vs. operator
+        # FailQueues): restored automatically when the host is healthy
+        self._auto_failed: set[int] = set()
+        self._participants: tuple[int, ...] = tuple(range(self.hosts))
+        self._barrier_deferred = False
+        self._deferred_since: int | None = None
+        self.failover_epochs: list[int] = []
+        self.restore_epochs: list[int] = []
         self._tick_count = 0
         self._t_start: float | None = None
+
+    # -- liveness helpers ----------------------------------------------------
+
+    def _responsive(self, host: int, tick: int | None = None) -> bool:
+        if self._faults is None:
+            return True
+        return self._faults.responsive(
+            host, self._tick_count if tick is None else tick)
+
+    def _barrier_ready(self, host: int) -> bool:
+        """Can this host quiesce at the barrier right now?"""
+        if not self._responsive(host):
+            return False
+        return (self._faults is None
+                or not self._faults.retire_blocked(host, self._tick_count))
+
+    def _live_hosts(self) -> tuple[int, ...]:
+        return self.health.live_hosts()
+
+    def _host_gids(self, host: int) -> tuple[int, ...]:
+        q = self.num_queues_per_host
+        return tuple(range(host * q, (host + 1) * q))
+
+    def _fault_point(self, point: str) -> None:
+        """Consult the injector at a stage/apply point for every commit
+        participant; an armed ``ShardError`` raises ``InjectedFault``."""
+        if self._faults is not None:
+            for h in self._participants:
+                self._faults.check(point, h, self._tick_count)
 
     # -- shard-projection helpers -------------------------------------------
 
@@ -159,10 +238,13 @@ class MeshDataplane:
         """STAGE phase of the two-phase broadcast: validate at mesh scope
         (global-id ranges), then stage the per-host projection on EVERY
         shard without mutating any — a single host's rejection rejects
-        the whole epoch before any host commits."""
+        the whole epoch before any host commits.  Only the current
+        barrier participants stage: a DEAD host cannot be asked, and its
+        stale state is resynced wholesale when it rejoins."""
+        self._fault_point("stage")
         if isinstance(cmd, SwapSlot):
-            for s in self.shards:
-                s._validate_command(cmd)
+            for h in self._participants:
+                self.shards[h]._validate_command(cmd)
         elif isinstance(cmd, ProgramReta):
             reta = np.asarray(cmd.reta, np.int32)
             if reta.size == 0:
@@ -170,8 +252,8 @@ class MeshDataplane:
             if reta.min() < 0 or reta.max() >= self.num_queues:
                 raise ValueError("RETA entry out of global queue range")
             proj = ProgramReta(tuple(self._shard_reta(reta)))
-            for s in self.shards:
-                s._validate_command(proj)
+            for h in self._participants:
+                self.shards[h]._validate_command(proj)
         elif isinstance(cmd, (FailQueues, RestoreQueues)):
             if any(not 0 <= q < self.num_queues for q in cmd.queues):
                 raise ValueError("queue id out of global range")
@@ -186,9 +268,10 @@ class MeshDataplane:
         same two mesh ticks.  Only ``ControlPlane.apply_pending`` calls
         this; its mesh-wide ``_control_state`` snapshot makes a commit
         that fails on any host roll back every host."""
+        self._fault_point("apply")
         if isinstance(cmd, SwapSlot):
-            for s in self.shards:
-                s._apply_command(cmd)
+            for h in self._participants:
+                self.shards[h]._apply_command(cmd)
             self.telemetry.slot_swaps += 1
         elif isinstance(cmd, ProgramReta):
             self._install_reta(np.asarray(cmd.reta, np.int32))
@@ -203,8 +286,8 @@ class MeshDataplane:
         if reta.min() < 0 or reta.max() >= self.num_queues:
             raise ValueError("RETA entry out of global queue range")
         proj = ProgramReta(tuple(self._shard_reta(reta)))
-        for s in self.shards:
-            s._apply_command(proj)
+        for h in self._participants:
+            self.shards[h]._apply_command(proj)
         if len(reta) != len(self.bucket_load):
             self.bucket_load = np.zeros(len(reta), np.int64)
         self.reta = reta
@@ -233,28 +316,108 @@ class MeshDataplane:
 
     def _apply_control(self) -> None:
         """Epoch-barrier commit: retire every in-flight tick on every
-        host (the barrier — all shards quiescent at one agreed mesh tick
-        boundary), apply the pending epochs, and stamp each applied one
-        with the per-host apply ticks.  Stamping runs even when a later
-        pending epoch is rejected mid-flush (``apply_pending`` raises):
-        epochs that DID commit must still carry their barrier proof.
-        Shards tick in lockstep with the mesh, so the stamps are equal —
-        checked, not assumed."""
-        if not self.control.has_pending:
-            return
-        self.retire_all()
-        try:
-            self.control.apply_pending(self._tick_count)
-        finally:
-            self._stamp_barrier()
+        live host (the barrier — all participating shards quiescent at
+        one agreed mesh tick boundary), then apply the pending epochs.
 
-    def _stamp_barrier(self) -> None:
+        A live host that cannot reach the barrier right now (stalled, or
+        its retire is injected-delayed) *defers* the whole commit — but
+        every deferred tick burns a tick of that host's lease, so the
+        deferral is bounded by ``lease_ticks``: the straggler either
+        recovers or is declared DEAD at a coming ``observe``, at which
+        point the epoch commits degraded over the survivors.  Each
+        epoch's barrier stamp and commit mode are recorded per-epoch by
+        ``_finish_epoch`` (called by ``ControlPlane.apply_pending``
+        inside the transaction)."""
+        if not self.control.has_pending:
+            self._barrier_deferred = False
+            self._deferred_since = None
+            return
+        tick = self._tick_count
+        live = self._live_hosts()
+        blocked = [h for h in live if not self._barrier_ready(h)]
+        if blocked:
+            self._barrier_deferred = True
+            if self._deferred_since is None:
+                self._deferred_since = tick
+            for h in blocked:
+                self.health.miss(h, tick)
+            return
+        self._barrier_deferred = False
+        self._deferred_since = None
+        self._participants = tuple(live)
+        self.retire_all()
+        self.control.apply_pending(tick)
+
+    def _finish_epoch(self, rec) -> None:
+        """Per-epoch commit finish, called inside the ``apply_pending``
+        transaction after the last command applied: collect commit acks
+        (the ``commit-ack`` injection point), enforce quorum, stamp the
+        barrier proof and the commit mode.  Raising here rolls the epoch
+        back on every host like any apply-time failure."""
+        tick = self._tick_count
+        dropped = [h for h in self._participants
+                   if self._faults is not None
+                   and self._faults.drop_ack(h, tick)]
+        acked = [h for h in self._participants if h not in dropped]
+        if len(acked) < self.quorum:
+            raise QuorumLost(
+                f"{len(acked)}/{self.hosts} commit acks "
+                f"(quorum {self.quorum}) for epoch {rec.epoch}")
         host_ticks = tuple(s._tick_count for s in self.shards)
-        if len(set(host_ticks)) != 1:   # host_ticks is proof: drift is fatal
+        part_ticks = {host_ticks[h] for h in self._participants}
+        if len(part_ticks) > 1 and not self.health.ever_missed:
+            # on a healthy mesh the all-equal stamp is a hard invariant;
+            # once hosts have missed ticks their counters lag by design
             raise RuntimeError(f"shard tick drift across hosts: {host_ticks}")
-        for rec in self.control.log:
-            if rec.applied and rec.host_ticks is None:
-                rec.host_ticks = host_ticks
+        rec.host_ticks = host_ticks
+        degraded = len(self._participants) < self.hosts or bool(dropped)
+        rec.commit_mode = "degraded" if degraded else "atomic"
+        if degraded:
+            self.telemetry.degraded_commits += 1
+        for h in dropped:
+            # an applied-but-unacked host cannot be trusted with traffic
+            # until it proves itself again: suspect it and fail it over
+            self.health.mark_suspect(h, tick, "commit ack dropped")
+            self._ensure_failover(h)
+
+    # -- host failover / rejoin ---------------------------------------------
+
+    def _ensure_failover(self, host: int) -> None:
+        """Synthesize a ``FailQueues`` epoch for the host's global queue
+        ids (those not already failed).  Synthesized epochs are internal
+        — like policy rebalances they are NOT recorded into traces; a
+        replay's own health layer regenerates them deterministically."""
+        gids = tuple(g for g in self._host_gids(host)
+                     if g not in self.failed_queues)
+        self._auto_failed.add(host)
+        if not gids:
+            return
+        survivors = (set(range(self.num_queues)) - self.failed_queues
+                     - set(gids))
+        if not survivors:
+            return   # nothing to fail over to; leave routing untouched
+        self.failover_epochs.append(self.control.submit(FailQueues(gids)))
+
+    def _restore_host(self, host: int) -> None:
+        gids = tuple(g for g in self._host_gids(host)
+                     if g in self.failed_queues)
+        self._auto_failed.discard(host)
+        if gids:
+            self.restore_epochs.append(
+                self.control.submit(RestoreQueues(gids)))
+
+    def _resync_shard(self, host: int) -> None:
+        """A rejoining host's shard missed every epoch committed while it
+        was DEAD: copy the bank from a live reference shard, reinstall
+        the current RETA projection, and retire its stale in-flight work
+        (stranded pre-crash packets complete instead of vanishing)."""
+        shard = self.shards[host]
+        ref = next((h for h in range(self.hosts) if h != host
+                    and not self.health.is_dead(h)), None)
+        if ref is not None:
+            shard.bank = self.shards[ref].bank
+        shard._install_reta(self._shard_reta(self.reta))
+        shard.retire_all()
 
     @property
     def barrier_log(self) -> list[dict]:
@@ -266,6 +429,16 @@ class MeshDataplane:
                 if r.applied and r.host_ticks is not None]
 
     def _tick_boundary(self) -> None:
+        tick = self._tick_count
+        for tr in self.health.observe(tick,
+                                      probe=lambda h: self._responsive(h)):
+            if tr.to == HostState.DEAD.value:
+                self._ensure_failover(tr.host)
+            elif tr.to == HostState.RECOVERING.value:
+                self._resync_shard(tr.host)
+        for h in sorted(self._auto_failed):
+            if self.health.state(h) is HostState.HEALTHY:
+                self._restore_host(h)
         self._apply_control()
         runtime_mod.consult_policy(self, num_hosts=self.hosts)
 
@@ -302,23 +475,57 @@ class MeshDataplane:
                 "dropped": sum(p["dropped"] for p in per_host)}
 
     def tick(self) -> int:
-        """One lockstep tick of every host shard (each keeps its own
-        bounded dispatch/device/retire pipeline)."""
+        """One lockstep tick of every live, responsive host shard (each
+        keeps its own bounded dispatch/device/retire pipeline).  Serving
+        a tick heartbeats the host's lease; failing to burns it.  DEAD
+        hosts are skipped entirely until a re-probe rejoins them."""
+        t = self._tick_count
         self._tick_boundary()
         self._tick_count += 1
-        return sum(s.tick() for s in self.shards)
+        total = 0
+        for h, s in enumerate(self.shards):
+            if self.health.is_dead(h):
+                continue
+            if not self._responsive(h, t):
+                self.health.miss(h, t)
+                continue
+            total += s.tick()
+            self.health.heartbeat(h, t)
+        return total
 
     def retire_all(self) -> None:
-        """Flush every shard's pipeline (the cross-host barrier point)."""
-        for s in self.shards:
-            s.retire_all()
+        """Flush the pipeline of every shard that can flush — live,
+        responsive, and not retire-blocked (the cross-host barrier
+        point).  A host that cannot flush keeps its in-flight rows;
+        conservation accounts them (``in_flight`` / ``stranded``)."""
+        for h, s in enumerate(self.shards):
+            if (not self.health.is_dead(h) and self._responsive(h)
+                    and (self._faults is None or not
+                         self._faults.retire_blocked(h, self._tick_count))):
+                s.retire_all()
 
     def in_flight_rows(self) -> list[int]:
         """Rows popped but not retired, host-major global-queue order."""
         return [n for s in self.shards for n in s.in_flight_rows()]
 
     def drain(self, max_ticks: int = 100_000) -> int:
-        return runtime_mod.drain_rings(self, max_ticks)
+        """Tick until every ring on every live host is empty and no
+        barrier is deferred, then flush.  Backlog on DEAD hosts does not
+        block convergence — it stays stranded (and conserved) until the
+        host rejoins; stalled-but-live hosts are waited for (bounded by
+        their lease)."""
+        done = 0
+        for _ in range(max_ticks):
+            n = self.tick()
+            done += n
+            live_rings = [r for h in range(self.hosts)
+                          if not self.health.is_dead(h)
+                          for r in self.shards[h].rings]
+            if (n == 0 and not any(len(r) for r in live_rings)
+                    and not self._barrier_deferred):
+                self.retire_all()
+                return done
+        raise RuntimeError("drain did not converge")
 
     # -- audit + reporting --------------------------------------------------
 
@@ -331,10 +538,17 @@ class MeshDataplane:
         totals = {k: sum(h["totals"][k] for h in per_host)
                   for k in ("offered", "admitted", "dropped", "completed",
                             "occupancy", "in_flight")}
+        dead = self.health.dead_hosts()
+        stranded = sum(per_host[h]["totals"]["occupancy"]
+                       + per_host[h]["totals"]["in_flight"] for h in dead)
         return {
             "per_host": per_host,
             "per_queue": [q for h in per_host for q in h["per_queue"]],
             "totals": totals,
+            # packets admitted to now-DEAD hosts, conserved but parked
+            # until the host rejoins (kept out of ``totals`` so a healthy
+            # mesh's audit is bit-identical to the single-host runtime's)
+            "stranded": {"packets": stranded, "hosts": list(dead)},
             "ok": all(h["ok"] for h in per_host),
             "wrong_verdict": self.telemetry.wrong_verdict,
         }
@@ -347,9 +561,13 @@ class MeshDataplane:
         # broadcast commands count once, not once per host
         out["slot_swaps"] = self.telemetry.slot_swaps
         out["reta_updates"] = self.telemetry.reta_updates
+        out["degraded_commits"] = self.telemetry.degraded_commits
         out["hosts"] = self.hosts
         out["queues_per_host"] = self.num_queues_per_host
         out["conservation"] = self.audit_conservation()
+        out["health"] = self.health.snapshot()
+        out["fault_events"] = (list(self._faults.events)
+                               if self._faults is not None else [])
         out["fanout"] = self.shards[0].fanout
         out["strategy"] = self.shards[0].strategy
         out["pipeline_depth"] = self.pipeline_depth

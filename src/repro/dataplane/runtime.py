@@ -175,6 +175,9 @@ class DataplaneRuntime:
         record: bool = False,
         pipeline_depth: int = 1,
         policy=None,
+        fault_injector=None,
+        log_capacity: int | None = None,
+        log_spill: str | None = None,
     ):
         self.bank = bank
         self.num_queues = int(num_queues)
@@ -201,7 +204,9 @@ class DataplaneRuntime:
         self._inflight: collections.deque[_InFlight] = collections.deque()
         self._last_retire_s: float | None = None
         self._tick_count = 0
-        self.control = ControlPlane(self)
+        self._faults = fault_injector
+        self.control = ControlPlane(self, log_capacity=log_capacity,
+                                    spill_path=log_spill)
         self.policy = policy          # initial config, not a mutation
         self.failed_queues: set[int] = set()
         self.bucket_load = np.zeros(len(self.reta), np.int64)
@@ -242,6 +247,7 @@ class DataplaneRuntime:
         mutates.  (Validation is against the pre-epoch state; an epoch
         whose commands only conflict with *each other* still fails at
         apply time and is logged with its error.)"""
+        self._fault_check("stage")
         if isinstance(cmd, SwapSlot):
             if not 0 <= int(cmd.slot) < self.num_slots:
                 raise ValueError(f"slot {cmd.slot} out of range")
@@ -274,6 +280,7 @@ class DataplaneRuntime:
     def _apply_command(self, cmd) -> None:
         """Apply ONE control command.  Only ``ControlPlane.apply_pending``
         may call this — it is the single mutation funnel."""
+        self._fault_check("apply")
         if isinstance(cmd, SwapSlot):
             self.bank = bank_lib.update_slot(self.bank, cmd.slot, cmd.params)
             self.telemetry.slot_swaps += 1
@@ -281,6 +288,12 @@ class DataplaneRuntime:
             self._install_reta(np.asarray(cmd.reta, np.int32))
         elif not apply_routing_command(self, cmd):
             raise TypeError(f"not a control command: {cmd!r}")
+
+    def _fault_check(self, point: str) -> None:
+        """Consult the armed ``FaultInjector`` (if any) at a stage/apply
+        injection point; a single-host runtime is always host 0."""
+        if self._faults is not None:
+            self._faults.check(point, 0, self._tick_count)
 
     def _control_state(self) -> dict:
         """Snapshot everything epochs mutate (apply-time rollback).  Safe
@@ -421,6 +434,12 @@ class DataplaneRuntime:
         """Pipeline stage 1 (dispatch): pop up to ``batch`` rows per queue
         and issue the workers asynchronously; stage 3 (retire) runs for
         the oldest tick once more than ``pipeline_depth`` are in flight."""
+        if (self._faults is not None
+                and not self._faults.responsive(0, self._tick_count)):
+            # injected stall: the tick elapses but the host serves
+            # nothing — pending epochs stay queued, rings keep backlog
+            self._tick_count += 1
+            return 0
         self._tick_boundary()
         self._tick_count += 1
         popped = [ring.pop(self.batch) for ring in self.rings]

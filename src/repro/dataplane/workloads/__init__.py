@@ -9,8 +9,9 @@ mesh, ``synthesize`` straight from generator phases).
 """
 
 from repro.dataplane.workloads.generators import (  # noqa: F401
-    REGIME_NAMES, Workload, cascading_failover_phases,
-    chaos_host_failover_phases, chaos_queue_surge_phases, diurnal_phases,
+    REGIME_NAMES, Workload, barrier_straggler_workload,
+    cascading_failover_phases, chaos_host_failover_phases,
+    chaos_queue_surge_phases, crash_mid_commit_workload, diurnal_phases,
     elephant_skew_phases, emergency_phases, file_corpus, file_replay_workload,
     flash_crowd_phases, make_scenario, make_workload, slot_thrash_phases,
 )

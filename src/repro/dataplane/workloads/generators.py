@@ -30,7 +30,22 @@ recorder for free.  The catalog (DESIGN.md §9):
 * ``file-replay``          — the recorded-trace converter: ingests a file
                              corpus (``/root/related`` workload file sets
                              when present) and derives phases + payload
-                             pools from the actual bytes.
+                             pools from the actual bytes;
+* ``barrier-straggler``    — a host's retire is injected-delayed past its
+                             lease while a command storm races the epoch
+                             barrier: deferral -> lease expiry -> degraded
+                             quorum commit + synthesized failover -> rejoin;
+* ``crash-mid-commit``     — a host drops its commit ack and crashes the
+                             next tick, mid-surge: degraded commit,
+                             stranded packets conserved on the dead host.
+
+The scripted ``chaos-*`` regimes express failures as *command* chaos
+(typed ``FailQueues``/``RestoreQueues`` epochs the operator could have
+sent); the two fault regimes express them as *injected* chaos — a
+``Workload.fault_plan`` armed into the runtime's ``FaultInjector``
+(`repro.dataplane.faults`), with the health layer synthesizing the
+failover/restore epochs itself.  Same observable guarantee, opposite
+detection path.
 
 ``make_workload`` is the one registry entry point; ``REGIME_NAMES`` is
 what the CLI and the CI scenario matrix enumerate.
@@ -47,6 +62,7 @@ import numpy as np
 from repro.control import FailQueues, ProgramReta, RestoreQueues, SwapSlot
 from repro.core import packet as pkt
 from repro.dataplane import rss
+import repro.dataplane.faults as faults_mod
 from repro.dataplane.workloads.phases import ChaosEvent, Phase
 
 
@@ -325,6 +341,96 @@ def chaos_host_failover_phases(
 
 
 # ---------------------------------------------------------------------------
+# fault regimes: failures as injector plans, not command scripts (§10)
+# ---------------------------------------------------------------------------
+
+def barrier_straggler_workload(
+    num_slots: int,
+    *,
+    hosts: int,
+    queues_per_host: int,
+    scale: int = 1,
+    lease_ticks: int = 8,
+) -> tuple[list[Phase], "faults_mod.FaultPlan"]:
+    """A barrier straggler held past its lease during a command storm.
+
+    The storm phase submits a ``SwapSlot`` chaos epoch every other tick
+    while the last host's retire is injected-delayed for longer than the
+    default lease: the barrier defers (bounded — every deferred tick
+    burns lease), the straggler is declared DEAD, pending epochs commit
+    degraded over the survivors with a synthesized failover epoch, and
+    the host rejoins (resync + restore) once the delay window closes.
+    On one host the plan degenerates to a short in-lease stall: the
+    barrier defers and then commits atomically — the bounded-deferral
+    half of the same guarantee.
+    """
+    uniform = _uniform(num_slots)
+    storm = tuple(ChaosEvent(at_tick=t, commands=(SwapSlot(t // 2 % num_slots,
+                                                           None),))
+                  for t in range(0, 12, 2))
+    phases = [
+        Phase("steady", ticks=4, burst=96 * scale, flows=48,
+              slot_mix=uniform),
+        Phase("storm", ticks=12, burst=128 * scale, flows=48,
+              slot_mix=uniform, chaos=storm),
+        Phase("settle", ticks=8, burst=96 * scale, flows=48,
+              slot_mix=uniform),
+    ]
+    if hosts > 1:
+        plan = faults_mod.FaultPlan(
+            faults=(faults_mod.DelayRetire(hosts - 1, at_tick=8,
+                                           ticks=lease_ticks + 6),),
+            name="barrier-straggler")
+    else:
+        plan = faults_mod.FaultPlan(
+            faults=(faults_mod.StallHost(0, at_tick=8,
+                                         ticks=max(lease_ticks - 2, 1)),),
+            name="barrier-straggler")
+    return phases, plan
+
+
+def crash_mid_commit_workload(
+    num_slots: int,
+    *,
+    hosts: int,
+    queues_per_host: int,
+    scale: int = 1,
+) -> tuple[list[Phase], "faults_mod.FaultPlan"]:
+    """A host loses its commit ack and crashes one tick later, mid-surge.
+
+    The surge phase carries ``SwapSlot`` chaos epochs; the victim host
+    drops the ack for one of them (degraded commit + suspect + failover)
+    and then crashes outright, leaving its ring backlog stranded — the
+    conservation audit must count every stranded packet while the mesh
+    keeps serving on the survivors.  On one host: a short stall instead
+    (crashing the only host leaves nothing to fail over to).
+    """
+    uniform = _uniform(num_slots)
+    surge_chaos = tuple(ChaosEvent(at_tick=t,
+                                   commands=(SwapSlot(t % num_slots, None),))
+                        for t in (1, 3, 5, 7))
+    phases = [
+        Phase("steady", ticks=3, burst=96 * scale, flows=48,
+              slot_mix=uniform),
+        Phase("surge", ticks=10, burst=192 * scale, flows=24,
+              slot_mix=_peaked(num_slots, 0, 0.7), chaos=surge_chaos),
+        Phase("aftermath", ticks=5, burst=96 * scale, flows=48,
+              slot_mix=uniform),
+    ]
+    if hosts > 1:
+        victim = hosts - 1
+        plan = faults_mod.FaultPlan(
+            faults=(faults_mod.DropAck(victim, at_tick=6, count=1),
+                    faults_mod.CrashHost(victim, at_tick=8)),
+            name="crash-mid-commit")
+    else:
+        plan = faults_mod.FaultPlan(
+            faults=(faults_mod.StallHost(0, at_tick=6, ticks=4),),
+            name="crash-mid-commit")
+    return phases, plan
+
+
+# ---------------------------------------------------------------------------
 # recorded-file converter (the /root/related workload file sets)
 # ---------------------------------------------------------------------------
 
@@ -440,11 +546,14 @@ def file_replay_workload(
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """One generated workload: its phases plus an optional payload pool
-    (``None`` = per-flow random payloads)."""
+    """One generated workload: its phases, an optional payload pool
+    (``None`` = per-flow random payloads), and an optional fault plan
+    the driver arms into the runtime's ``FaultInjector`` (fault regimes
+    only — phases stay pure traffic + command scripts either way)."""
     name: str
     phases: tuple[Phase, ...]
     payload_pool: np.ndarray | None = None
+    fault_plan: "faults_mod.FaultPlan | None" = None
 
 
 def _mk(name, fn):
@@ -468,6 +577,7 @@ def make_workload(
     """
     total = hosts * num_queues
     pool = None
+    plan = None
     if name == "emergency":
         phases = emergency_phases(num_slots, scale=scale)
     elif name == "elephant-skew":
@@ -489,10 +599,17 @@ def make_workload(
     elif name == "file-replay":
         phases, pool = file_replay_workload(
             num_slots, scale=scale, root=corpus_root)
+    elif name == "barrier-straggler":
+        phases, plan = barrier_straggler_workload(
+            num_slots, hosts=hosts, queues_per_host=num_queues, scale=scale)
+    elif name == "crash-mid-commit":
+        phases, plan = crash_mid_commit_workload(
+            num_slots, hosts=hosts, queues_per_host=num_queues, scale=scale)
     else:
         raise ValueError(
             f"unknown workload {name!r} (known: {list(REGIME_NAMES)})")
-    return Workload(name=name, phases=tuple(phases), payload_pool=pool)
+    return Workload(name=name, phases=tuple(phases), payload_pool=pool,
+                    fault_plan=plan)
 
 
 #: Every regime the registry serves — the CI scenario matrix iterates this.
@@ -506,6 +623,8 @@ REGIME_NAMES = (
     "chaos-queue-surge",
     "chaos-host-failover",
     "file-replay",
+    "barrier-straggler",
+    "crash-mid-commit",
 )
 
 

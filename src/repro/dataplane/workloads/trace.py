@@ -136,7 +136,7 @@ def runtime_meta(rt) -> dict:
     """The runtime shape a trace was recorded against (what a replay must
     reconstruct for bit-exactness)."""
     t = _template(rt)
-    return {
+    meta = {
         "hosts": getattr(rt, "hosts", 1),
         "queues_per_host": (rt.num_queues_per_host
                             if hasattr(rt, "num_queues_per_host")
@@ -152,6 +152,18 @@ def runtime_meta(rt) -> dict:
         # runtime must run the same policy
         "policy": _policy_name(getattr(rt, "policy", None)),
     }
+    # an armed fault plan is part of the runtime shape: like policy
+    # rebalances, the failover/restore epochs the health layer
+    # synthesizes are NOT recorded — the replay's own injector + health
+    # monitor regenerate them deterministically, so the plan (and the
+    # lease/quorum config driving detection) must ride along
+    injector = getattr(rt, "_faults", None)
+    meta["fault_plan"] = (injector.plan.to_dict()
+                          if injector is not None else None)
+    if hasattr(rt, "lease_ticks"):
+        meta["lease_ticks"] = rt.lease_ticks
+        meta["quorum"] = rt.quorum
+    return meta
 
 
 def digest(rt) -> dict:
@@ -382,8 +394,17 @@ def make_runtime(trace: WorkloadTrace, *, bank=None, audit: bool = False,
               policy=(make_policy(meta["policy"])
                       if meta.get("policy") else None),
               record=True, audit=audit)
-    kw.update(overrides)
     hosts = int(meta.get("hosts", 1))
+    if meta.get("fault_plan") is not None:
+        from repro.dataplane import faults as faults_mod
+        kw["fault_injector"] = faults_mod.FaultInjector(
+            faults_mod.FaultPlan.from_dict(meta["fault_plan"]))
+    if hosts > 1:
+        if meta.get("lease_ticks") is not None:
+            kw["lease_ticks"] = int(meta["lease_ticks"])
+        if meta.get("quorum") is not None:
+            kw["quorum"] = int(meta["quorum"])
+    kw.update(overrides)
     queues = int(meta.get("queues_per_host")
                  or meta.get("num_queues", 4) // hosts)
     if hosts > 1:

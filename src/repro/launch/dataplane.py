@@ -16,6 +16,18 @@ bank — as a versioned compressed trace; ``--trace replay PATH`` replays
 a recorded trace bit-exactly (verdict-stream digest checked) through a
 runtime rebuilt from the trace's own metadata.
 
+``--fault-plan FILE`` arms a typed fault plan (`repro.dataplane.faults`
+JSON: stalls, crashes, shard errors, dropped acks, delayed retires);
+the fault regimes (``barrier-straggler``, ``crash-mid-commit``) arm
+their built-in plan automatically.  ``--lease-ticks`` bounds how long a
+straggler can defer the mesh barrier before the commit goes degraded
+over a quorum; the epoch-log printout tags every degraded or
+rolled-back epoch with its commit mode and error.  ``--log-capacity``
+bounds epoch-log memory, spilling evicted records to ``--log-spill``.
+
+    PYTHONPATH=src python -m repro.launch.dataplane \\
+        --hosts 2 --scenario crash-mid-commit --lease-ticks 4 --audit
+
     PYTHONPATH=src python -m repro.launch.dataplane --queues 4
     PYTHONPATH=src python -m repro.launch.dataplane \\
         --policy least-depth --scenario elephant-skew
@@ -37,7 +49,8 @@ import jax
 
 from repro.control import make_policy
 from repro.core import executor
-from repro.dataplane import DataplaneRuntime, MeshDataplane, workloads
+from repro.dataplane import (DataplaneRuntime, MeshDataplane, faults,
+                             workloads)
 
 
 def _print_run_report(rt, reports, hosts: int, queues_per_host: int) -> dict:
@@ -77,15 +90,42 @@ def _print_run_report(rt, reports, hosts: int, queues_per_host: int) -> dict:
 
     log = rt.control.command_log()
     cont = rt.control.continuity_audit()
+    modes = cont.get("commit_modes", {})
+    mode_str = " ".join(f"{k}={v}" for k, v in modes.items() if v)
     print(f"control: api_v{rt.control.API_VERSION}, "
-          f"{len(log)} epoch(s) applied, continuity ok={cont['ok']}")
+          f"{len(log)} epoch(s) in log, continuity ok={cont['ok']}"
+          + (f" [{mode_str}]" if mode_str else ""))
+    if cont.get("spilled_epochs"):
+        print(f"  ({cont['spilled_epochs']} older epoch(s) spilled, "
+              f"wrong_verdict_in_spill={cont['spilled_wrong_verdict']})")
     for rec in log:
         cmds = ", ".join(c["cmd"] for c in rec["commands"])
         barrier = (f" hosts@{rec['host_ticks']}"
                    if rec.get("host_ticks") else "")
-        print(f"  epoch {rec['epoch']:>3} @tick {rec['applied_tick']:<6} "
-              f"[{cmds}] apply={rec['apply_us']:.0f}us "
-              f"latency={rec['apply_latency_us']:.0f}us{barrier}")
+        mode = rec.get("commit_mode")
+        tag = f" <{mode}>" if mode and mode != "atomic" else ""
+        at = rec["applied_tick"] if rec["applied_tick"] is not None else "-"
+        head = f"  epoch {rec['epoch']:>3} @tick {at!s:<6} [{cmds}]"
+        if rec.get("apply_us") is None:
+            print(f"{head} ROLLED BACK{tag}: {rec.get('error')}")
+        else:
+            print(f"{head} apply={rec['apply_us']:.0f}us "
+                  f"latency={rec['apply_latency_us']:.0f}us{barrier}{tag}")
+    health = snap.get("health")
+    if health and health.get("transitions"):
+        states = " ".join(f"host{h['host']}={h['state']}"
+                          for h in health["hosts"])
+        print(f"health: lease={health['lease_ticks']} ticks, {states}")
+        for t in health["transitions"]:
+            print(f"  tick {t['tick']:>4}: host {t['host']} "
+                  f"{t['frm']} -> {t['to']} ({t['reason']})")
+    for ev in snap.get("fault_events") or ():
+        print(f"fault: tick {ev['tick']} host {ev['host']} "
+              f"@{ev['point']}: {ev['detail']}")
+    stranded = snap["conservation"].get("stranded")
+    if stranded and stranded["packets"]:
+        print(f"stranded: {stranded['packets']} packet(s) on dead "
+              f"host(s) {stranded['hosts']} (counted, not lost)")
     snap["control_log"] = log
     snap["continuity"] = cont
     return snap
@@ -159,6 +199,20 @@ def main(argv=None) -> None:
                     help="'record PATH' saves this run as a replayable "
                          "trace; 'replay PATH' replays a recorded trace "
                          "(runtime shape from the trace itself)")
+    ap.add_argument("--fault-plan", metavar="FILE", default=None,
+                    help="JSON fault plan to arm (overrides the "
+                         "regime's built-in plan)")
+    ap.add_argument("--lease-ticks", type=int, default=8,
+                    help="mesh host-health lease: max ticks a straggler "
+                         "may defer the barrier before degraded commit")
+    ap.add_argument("--quorum", type=int, default=None,
+                    help="hosts that must ack a commit "
+                         "(default: majority)")
+    ap.add_argument("--log-capacity", type=int, default=None,
+                    help="bound the in-memory epoch log; evicted "
+                         "records spill in trace-style chunks")
+    ap.add_argument("--log-spill", metavar="PATH", default=None,
+                    help="file to receive spilled epoch records")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the full report as JSON")
     args = ap.parse_args(argv)
@@ -185,14 +239,24 @@ def main(argv=None) -> None:
           f"{trace.total_packets} packets, {chaos_epochs} chaos event(s), "
           f"seed={args.seed} (replayable)")
 
+    plan = (faults.load_plan(args.fault_plan) if args.fault_plan
+            else workload.fault_plan)
+    injector = faults.FaultInjector(plan) if plan is not None else None
+    if injector is not None and injector.armed:
+        kinds = ", ".join(sorted({type(f).__name__ for f in plan.faults}))
+        print(f"fault plan: {plan.name!r}, {len(plan.faults)} fault(s) "
+              f"armed ({kinds}), lease={args.lease_ticks} ticks")
+
     policy = make_policy(args.policy) if args.policy else None
     recording = bool(args.trace)
     kw = dict(strategy=args.strategy, fanout=args.fanout, batch=args.batch,
               ring_capacity=args.ring_capacity, audit=args.audit,
               pipeline_depth=args.pipeline_depth, policy=policy,
-              record=recording)
+              record=recording, fault_injector=injector,
+              log_capacity=args.log_capacity, log_spill=args.log_spill)
     if args.hosts > 1:
         rt = MeshDataplane(bank, hosts=args.hosts, num_queues=args.queues,
+                           lease_ticks=args.lease_ticks, quorum=args.quorum,
                            **kw)
         shape = (f"{args.hosts} hosts x {args.queues} queues "
                  f"({total_queues} global)")
