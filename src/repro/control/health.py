@@ -85,6 +85,9 @@ class HealthMonitor:
         self.transitions: list[Transition] = []
         self.total_misses = 0
         self.total_probes = 0
+        # observability tap: called with each Transition as it happens —
+        # obs.attach wires this into a TelemetryStream as health events
+        self.on_transition = None
 
     def _move(self, tick: int, host: int, to: HostState,
               reason: str) -> Transition:
@@ -93,6 +96,8 @@ class HealthMonitor:
                         to=to.value, reason=reason)
         lease.state = to
         self.transitions.append(tr)
+        if self.on_transition is not None:
+            self.on_transition(tr)
         return tr
 
     # -- the tick-granularity observation stream -----------------------------

@@ -141,6 +141,10 @@ class ControlPlane:
         self.spilled_epochs = 0
         self._spilled_wrong = 0
         self._mode_counts = {m: 0 for m in COMMIT_MODES}
+        # observability tap: called with each EpochRecord as it lands in
+        # the log (committed AND rolled-back epochs) — obs.attach wires
+        # this into a TelemetryStream as span events
+        self.on_record = None
 
     # -- submission ---------------------------------------------------------
 
@@ -228,6 +232,8 @@ class ControlPlane:
         self._strip_payloads(rec)
         if rec.commit_mode in self._mode_counts:
             self._mode_counts[rec.commit_mode] += 1
+        if self.on_record is not None:
+            self.on_record(rec)
         self._log.append(rec)
         cap = self._log_capacity
         if cap is not None and len(self._log) > cap:

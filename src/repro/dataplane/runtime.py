@@ -407,6 +407,7 @@ class DataplaneRuntime:
                 raise ValueError(
                     f"precomputed queue ids out of range for "
                     f"{self.num_queues} queues")
+        self.telemetry.touch(now)
         per_queue = []
         for i, ring in enumerate(self.rings):
             rows = packets_np[q == i]
@@ -414,6 +415,7 @@ class DataplaneRuntime:
             if self._record and admitted < rows.shape[0]:
                 self.dropped_seq.extend(
                     int(s) for s in rows[admitted:, SEQ_WORD])
+            self.telemetry.record_drops(i, int(rows.shape[0]) - admitted)
             per_queue.append({"offered": int(rows.shape[0]),
                               "admitted": admitted,
                               "dropped": int(rows.shape[0]) - admitted})
@@ -442,6 +444,7 @@ class DataplaneRuntime:
             return 0
         self._tick_boundary()
         self._tick_count += 1
+        self.telemetry.runtime_ticks += 1
         popped = [ring.pop(self.batch) for ring in self.rings]
         counts = [rows.shape[0] for rows, _ in popped]
         total = sum(counts)
@@ -509,11 +512,20 @@ class DataplaneRuntime:
                 self.completed_seq[q].extend(int(s) for s in rows[:, SEQ_WORD])
                 self.completed_verdicts[q].extend(bool(v) for v in verdicts)
                 self.completed_slots[q].extend(int(s) for s in slots)
+        self.telemetry.touch(now)
+        if self.telemetry.has_sink:
+            self.telemetry.emit_delta(
+                tick=rec.tick, now=now,
+                depths=[len(r) for r in self.rings])
 
     def retire_all(self) -> None:
         """Flush the pipeline: retire every in-flight tick (oldest first)."""
         while self._inflight:
             self._retire(self._inflight.popleft())
+        if self.telemetry.has_sink:
+            # flush counters with no retire to ride on (e.g. trailing
+            # dispatch-edge drops) so the delta stream sums to snapshot()
+            self.telemetry.emit_delta(tick=self._tick_count)
 
     def in_flight_rows(self) -> list[int]:
         """Rows popped but not yet retired, per queue."""

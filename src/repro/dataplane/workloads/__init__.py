@@ -21,7 +21,7 @@ from repro.dataplane.workloads.phases import (  # noqa: F401
     phase_commands, play, render,
 )
 from repro.dataplane.workloads.trace import (  # noqa: F401
-    INVARIANT_KEYS, TRACE_VERSION, PackedLeaves, TraceRecorder,
+    INVARIANT_KEYS, TRACE_VERSION, PackedLeaves, StreamedTrace, TraceRecorder,
     WorkloadTrace, digest, load, make_runtime, record, replay, restore_bank,
     runtime_meta, save, synthesize,
 )

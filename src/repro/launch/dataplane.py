@@ -12,9 +12,18 @@ mesh data plane; ``--policy`` installs a closed-loop routing policy;
 
 ``--trace record PATH`` records the run — packet batches, typed command
 timeline (chaos events included), per-phase invariants, and the initial
-bank — as a versioned compressed trace; ``--trace replay PATH`` replays
-a recorded trace bit-exactly (verdict-stream digest checked) through a
-runtime rebuilt from the trace's own metadata.
+bank — as a versioned compressed trace, *streamed* to disk in chunks as
+the run progresses; ``--trace replay PATH`` replays a recorded trace
+bit-exactly (verdict-stream digest checked) through a runtime rebuilt
+from the trace's own metadata.
+
+``--observe PORT`` starts the live observability server
+(`repro.obs.server`) alongside the run: the dashboard at
+``http://127.0.0.1:PORT/``, ``/metrics``, ``/epochs``, ``/anomaly``,
+and the ``/stream`` SSE tail; ``--observe-linger SECS`` keeps it up
+after the run finishes so dashboards and smoke tests can read the
+final state.  ``--epoch-log-json PATH`` writes the machine-readable
+epoch log (the same serializer the ``/epochs`` endpoint uses).
 
 ``--fault-plan FILE`` arms a typed fault plan (`repro.dataplane.faults`
 JSON: stalls, crashes, shard errors, dropped acks, delayed retires);
@@ -44,6 +53,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 
 import jax
 
@@ -131,6 +141,41 @@ def _print_run_report(rt, reports, hosts: int, queues_per_host: int) -> dict:
     return snap
 
 
+def _start_observer(rt, args, *, num_slots: int):
+    """``--observe PORT``: attach the delta stream + detector, serve."""
+    if args.observe is None:
+        return None
+    from repro.obs import AnomalyDetector, TelemetryStream, attach
+    from repro.obs.server import ObsServer
+    stream = TelemetryStream()
+    attach(rt, stream)
+    det = AnomalyDetector(stream, num_queues=rt.num_queues,
+                          num_slots=num_slots,
+                          hosts=getattr(rt, "hosts", 1))
+    srv = ObsServer(rt, stream, port=args.observe, detector=det).start()
+    print(f"observe: http://{srv.host}:{srv.port}/ "
+          f"(/metrics /epochs /anomaly /stream /healthz)")
+    return srv
+
+
+def _finish_observer(srv, rt, args) -> None:
+    """Write ``--epoch-log-json`` and wind down the observe server."""
+    if args.epoch_log_json:
+        from repro.obs import spans
+        from repro.obs.server import _json_default
+        with open(args.epoch_log_json, "w") as f:
+            json.dump(spans.epoch_log_doc(rt), f, indent=2,
+                      default=_json_default)
+            f.write("\n")
+        print(f"wrote {args.epoch_log_json}")
+    if srv is not None:
+        if args.observe_linger > 0:
+            print(f"observe: lingering {args.observe_linger:.0f}s on "
+                  f"port {srv.port}", flush=True)
+            time.sleep(args.observe_linger)
+        srv.stop()
+
+
 def _replay_main(args) -> None:
     """``--trace replay PATH``: runtime shape comes from the trace."""
     trace = workloads.load(args.trace[1])
@@ -143,6 +188,8 @@ def _replay_main(args) -> None:
           f"{len(trace.command_timeline())} command epoch(s), "
           f"{hosts} host(s) x {queues} queue(s)")
     rt = workloads.make_runtime(trace, audit=args.audit)
+    observer = _start_observer(rt, args,
+                               num_slots=int(meta.get("num_slots") or 4))
     rep = workloads.replay(trace, rt)
     snap = _print_run_report(rt, rep["phases"], hosts, queues)
     dig = rep["digest"]
@@ -150,6 +197,7 @@ def _replay_main(args) -> None:
           + (f" sha256={dig['sha256'][:16]}..." if dig else ""))
     for m in rep["mismatches"]:
         print(f"  MISMATCH {m}")
+    _finish_observer(observer, rt, args)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"replay": {k: rep[k] for k in
@@ -215,6 +263,16 @@ def main(argv=None) -> None:
                     help="file to receive spilled epoch records")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the full report as JSON")
+    ap.add_argument("--observe", type=int, metavar="PORT", default=None,
+                    help="serve the live dashboard/API on this port "
+                         "(0 = ephemeral) while the run executes")
+    ap.add_argument("--observe-linger", type=float, metavar="SECS",
+                    default=0.0,
+                    help="keep the observe server up this long after "
+                         "the run finishes")
+    ap.add_argument("--epoch-log-json", metavar="PATH", default=None,
+                    help="write the machine-readable epoch log (same "
+                         "serializer as the /epochs endpoint)")
     args = ap.parse_args(argv)
     if args.hosts < 1:
         ap.error("--hosts must be >= 1")
@@ -268,17 +326,18 @@ def main(argv=None) -> None:
           f"ring={args.ring_capacity}, depth={rt.pipeline_depth}, "
           f"policy={getattr(policy, 'name', None)}")
 
-    driver = workloads.record(rt) if recording else rt
+    observer = _start_observer(rt, args, num_slots=args.slots)
+    driver = (workloads.record(rt, path=args.trace[1]) if recording
+              else rt)
     reports = workloads.play(driver, trace)
     snap = _print_run_report(rt, reports, args.hosts, args.queues)
 
     if recording:
         saved = driver.finish(name=args.scenario, seed=args.seed)
-        nbytes = workloads.save(saved, args.trace[1])
-        print(f"recorded trace: {len(saved.steps)} steps, "
+        print(f"recorded trace: {saved.steps} steps, "
               f"{saved.total_packets} packets, "
               f"digest={'yes' if 'digest' in saved.expect else 'no'} "
-              f"-> {args.trace[1]} ({nbytes} bytes)")
+              f"-> {saved.path} ({saved.nbytes} bytes, streamed)")
 
     if args.json:
         with open(args.json, "w") as f:
@@ -287,6 +346,7 @@ def main(argv=None) -> None:
                        "continuity": snap["continuity"]}, f, indent=2)
             f.write("\n")
         print(f"wrote {args.json}")
+    _finish_observer(observer, rt, args)
     aud = snap["conservation"]
     if not aud["ok"] or aud["wrong_verdict"] or not snap["continuity"]["ok"]:
         sys.exit(1)
