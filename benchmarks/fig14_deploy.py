@@ -1,0 +1,191 @@
+"""Fig. 14 (repo extension) — continuous deployment under live traffic.
+
+Three measurements over `repro.deploy` (DESIGN.md §12):
+
+  * **sampler overhead** — the emergency regime played with and without
+    a ``PacketSampler`` tapped into the retire/drop path (oracle
+    labeling + reservoir upkeep on the host thread): kpps both ways,
+    the per-tick sampling cost, and an ``expect=0`` audit that the
+    overhead stays under the 5% budget (always-on sampling must not
+    backpressure the tick loop);
+  * **rollout latency** — one scripted fine-tune -> canary -> promote
+    rollout and one forced (corrupted-weights) rollback, both under
+    live emergency traffic with ``audit=True``: online fine-tune cost,
+    canary-start-to-promote and canary-start-to-rollback wall time, and
+    the retrain-to-promote total an operator would see;
+  * **decision audits** — ``expect=0``: both rollouts reach exactly the
+    expected terminal decision (promote resp. rollback), zero wrong
+    verdicts across the bake windows, conservation and epoch-continuity
+    intact — the "every deployment decision is a typed epoch" claim.
+
+Run standalone with ``--json BENCH_8.json`` for the machine-readable
+map, or through ``python -m benchmarks.run --only fig14``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # invoked as `python benchmarks/fig14_deploy.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(1, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, standalone_json_main
+from repro import deploy
+from repro.core import executor
+from repro.dataplane import DataplaneRuntime, workloads
+
+NUM_SLOTS = 2
+NUM_QUEUES = 4
+BATCH = 128
+OVERHEAD_BUDGET_PCT = 5.0
+
+
+def _labeled_trace(scale: int = 1):
+    """Emergency regime rendered from the labeled corpus pool (the
+    sampler's oracle needs ground truth for every payload)."""
+    pool, labels = deploy.labeled_pool(samples_per_group=256, seed=0)
+    w = workloads.make_workload("emergency", num_slots=NUM_SLOTS,
+                                num_queues=NUM_QUEUES, scale=scale)
+    trace = workloads.render(list(w.phases), num_slots=NUM_SLOTS, seed=0,
+                             num_queues=NUM_QUEUES, payload_pool=pool)
+    return trace, deploy.LabelOracle(pool, labels)
+
+
+def _runtime(bank, **kw):
+    kw.setdefault("batch", BATCH)
+    kw.setdefault("ring_capacity", 4096)
+    return DataplaneRuntime(bank, num_queues=NUM_QUEUES, **kw)
+
+
+def bench_sampler_overhead(bank):
+    """Emergency play with the retire/drop taps empty vs sampling.
+
+    The tick-path cost is the tap alone (the retire tap enqueues batch
+    references and returns; subsampling + labeling defer to ``flush()``
+    on the consumer side, reported separately below).  It sits far below
+    OS jitter on a single run; min over alternating reps is the robust
+    estimator (jitter only adds time)."""
+    trace, oracle = _labeled_trace(scale=2)
+
+    def run(with_sampler: bool) -> tuple[float, int, int]:
+        rt = _runtime(bank)
+        sampler = (deploy.PacketSampler(oracle, num_slots=NUM_SLOTS)
+                   .attach(rt) if with_sampler else None)
+        t0 = time.perf_counter()
+        workloads.play(rt, trace)
+        dt = time.perf_counter() - t0
+        if sampler is not None:
+            sampler.detach()  # flushes the deferred labeling queue
+            assert sampler.labeled > 0  # the tap actually did the work
+        done = rt.telemetry.snapshot()["completed_total"]
+        return dt, done, rt.telemetry.runtime_ticks
+
+    run(False)  # warm the jit caches off the clock
+    base, tapped = [], []
+    ticks = done = 0
+    for _ in range(5):  # alternate to keep drift out of the delta
+        dt0, done, ticks = run(False)
+        dt1, _, _ = run(True)
+        base.append(dt0)
+        tapped.append(dt1)
+    dt0, dt1 = float(np.min(base)), float(np.min(tapped))
+    overhead_pct = max(dt1 - dt0, 0.0) / dt0 * 100.0
+
+    # the deferred consumer-side cost, accounted explicitly: one flush of
+    # everything the whole play enqueued (subsample + label + reservoirs)
+    rt = _runtime(bank)
+    sampler = deploy.PacketSampler(oracle, num_slots=NUM_SLOTS).attach(rt)
+    workloads.play(rt, trace)
+    t0 = time.perf_counter()
+    sampler.flush()
+    flush_s = time.perf_counter() - t0
+    sampler.detach()
+
+    emit("fig14.sampler.kpps_untapped", done / dt0 / 1e3,
+         f"{done} pkts emergency play, taps empty")
+    emit("fig14.sampler.kpps_tapped", done / dt1 / 1e3,
+         "same play, sampler labeling + reservoirs attached")
+    emit("fig14.sampler.per_tick_us",
+         max(dt1 - dt0, 0.0) * 1e6 / max(ticks, 1),
+         f"per-tick tap cost over {ticks} ticks")
+    emit("fig14.sampler.flush_us_per_krow",
+         flush_s * 1e6 / max(sampler.sampled / 1e3, 1e-9),
+         f"deferred label+file cost, {sampler.sampled} rows one flush")
+    emit("fig14.audit.sampler_overhead_over_budget",
+         int(overhead_pct > OVERHEAD_BUDGET_PCT),
+         f"expect=0: overhead {overhead_pct:.2f}% within "
+         f"{OVERHEAD_BUDGET_PCT:.0f}% budget")
+    assert overhead_pct <= OVERHEAD_BUDGET_PCT, overhead_pct
+
+
+def _run_rollout(bank, trace, oracle, *, corrupt: bool):
+    """One scripted rollout under live traffic; returns (pilot, runtime)."""
+    rt = _runtime(bank, audit=True)
+    sampler = deploy.PacketSampler(oracle, num_slots=NUM_SLOTS).attach(rt)
+    driver = deploy.DeployDriver(rt)
+    pilot = deploy.ScheduledRollout(
+        driver, sampler, deploy.OnlineTrainer(steps=24, seed=0),
+        warmup_ticks=8, min_samples=48, corrupt=corrupt,
+        canary_kw=dict(bake_ticks=8, min_samples=24))
+    driver.add(pilot)
+    workloads.play(driver, trace)
+    driver.flush_deploy()
+    sampler.detach()
+    return pilot, rt
+
+
+def bench_rollout_latency(bank):
+    trace, oracle = _labeled_trace()
+    bad_outcome = wrong = 0
+    for corrupt, want in ((False, "promoted"), (True, "rolled_back")):
+        pilot, rt = _run_rollout(bank, trace, oracle, corrupt=corrupt)
+        rec = pilot.decision
+        ok = rec is not None and rec["event"] == want
+        bad_outcome += int(not ok)
+        aud = rt.audit_conservation()
+        wrong += int(rt.telemetry.wrong_verdict)
+        bad_outcome += int(not aud["ok"])
+        bad_outcome += int(not rt.control.continuity_audit()["ok"])
+        if rec is None:
+            continue
+        bake_us = rec["metrics"]["elapsed_us"]
+        if corrupt:
+            emit("fig14.deploy.rollback_latency_us", bake_us,
+                 f"canary start -> rolled_back "
+                 f"({rec['metrics']['bake_window_ticks']} ticks bake, "
+                 f"reason: {rec['reason']})")
+        else:
+            train_us = pilot.result.train_us
+            emit("fig14.deploy.fine_tune_us", train_us,
+                 f"{pilot.result.metrics['samples']} sampled examples, "
+                 f"24 STE steps, holdout err "
+                 f"{pilot.result.metrics['err']:.3f}")
+            emit("fig14.deploy.promote_latency_us", bake_us,
+                 f"canary start -> promoted "
+                 f"({rec['metrics']['bake_window_ticks']} ticks bake)")
+            emit("fig14.deploy.retrain_to_promote_us", train_us + bake_us,
+                 "operator-visible: fine-tune + canary bake + promote epoch")
+    emit("fig14.audit.rollout_outcome_mismatch", bad_outcome,
+         "expect=0: promote run promoted, corrupted run rolled back, "
+         "conservation + epoch continuity intact on both")
+    emit("fig14.audit.deploy_wrong_verdict", wrong,
+         "expect=0: zero wrong verdicts across both audited rollouts")
+    assert bad_outcome == 0 and wrong == 0
+
+
+def main() -> None:
+    bank = executor.init_bank(jax.random.PRNGKey(0), NUM_SLOTS)
+    bench_sampler_overhead(bank)
+    bench_rollout_latency(bank)
+
+
+if __name__ == "__main__":
+    standalone_json_main(
+        main, "fig14: continuous deployment — sampling, canary rollouts")

@@ -151,8 +151,8 @@ def main(argv=None) -> None:
     from benchmarks import (fig4_runtime, fig5_scaling, fig6_slot_behavior,
                             fig7_fused, fig8_dataplane, fig9_control,
                             fig10_mesh, fig11_workloads, fig12_faults,
-                            fig13_obs, roofline, table4_continuity,
-                            table5_controlplane)
+                            fig13_obs, fig14_deploy, roofline,
+                            table4_continuity, table5_controlplane)
 
     benches = [
         ("fig4", fig4_runtime.main),
@@ -165,6 +165,7 @@ def main(argv=None) -> None:
         ("fig11", fig11_workloads.main),
         ("fig12", fig12_faults.main),
         ("fig13", fig13_obs.main),
+        ("fig14", fig14_deploy.main),
         ("table4", table4_continuity.main),
         ("table5", table5_controlplane.main),
         ("roofline", roofline.main),

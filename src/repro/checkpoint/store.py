@@ -1,10 +1,17 @@
-"""Sharded tensor checkpoint store: msgpack manifest + zstd leaf files.
+"""Sharded tensor checkpoint store: msgpack manifest + compressed leaf files.
+
+Leaves are zstd-compressed when ``zstandard`` is importable, else stdlib
+zlib; the codec is recorded in the manifest and either codec is accepted on
+restore (restore reads leaf filenames from the manifest, so the extension is
+informational only — legacy checkpoints whose zlib leaves were written with
+a ``.zst`` suffix still restore).
 
 Layout::
 
     <dir>/step_<N>/
-        MANIFEST.msgpack     # {paths, shapes, dtypes, mesh metadata, extra}
+        MANIFEST.msgpack     # {paths, shapes, dtypes, codec, extra}
         <leaf-hash>.bin.zst  # one compressed raw-bytes file per leaf
+                             # (.bin.zlib under the zlib fallback)
 
 Commit protocol: everything is written into ``step_<N>.tmp`` and atomically
 renamed — a crash mid-save never corrupts the latest checkpoint.  Restore is
@@ -68,8 +75,11 @@ def _dtype_from_name(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
-def _leaf_file(path_s: str) -> str:
-    return hashlib.sha1(path_s.encode()).hexdigest()[:16] + ".bin.zst"
+_LEAF_EXT = {"zstd": "zst", "zlib": "zlib"}
+
+
+def _leaf_file(path_s: str, codec: str) -> str:
+    return hashlib.sha1(path_s.encode()).hexdigest()[:16] + ".bin." + _LEAF_EXT[codec]
 
 
 def _path_str(path) -> str:
@@ -100,7 +110,7 @@ def save(directory: str, step: int, tree, extra: dict | None = None,
     for path, leaf in leaves:
         ps = _path_str(path)
         arr = np.asarray(leaf)
-        fname = _leaf_file(ps)
+        fname = _leaf_file(ps, codec)
         with open(os.path.join(tmp, fname), "wb") as f:
             f.write(compress(arr.tobytes()))
         manifest["leaves"].append({

@@ -197,6 +197,13 @@ class DataplaneRuntime:
         self.completed_verdicts = [[] for _ in range(self.num_queues)]
         self.completed_slots = [[] for _ in range(self.num_queues)]
         self.dropped_seq: list[int] = []
+        # deploy/observability taps (host callbacks off the hot path; they
+        # must treat their arguments as read-only and stay cheap — the tick
+        # loop does not shield itself from a slow tap):
+        #   on_retire(queue, rows, slots, verdicts, actions, tick)
+        #   on_drop(queue, rows)   — dispatch-edge tail drops
+        self.on_retire = None
+        self.on_drop = None
         self._t_start: float | None = None
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
@@ -415,6 +422,8 @@ class DataplaneRuntime:
             if self._record and admitted < rows.shape[0]:
                 self.dropped_seq.extend(
                     int(s) for s in rows[admitted:, SEQ_WORD])
+            if self.on_drop is not None and admitted < rows.shape[0]:
+                self.on_drop(i, rows[admitted:])
             self.telemetry.record_drops(i, int(rows.shape[0]) - admitted)
             per_queue.append({"offered": int(rows.shape[0]),
                               "admitted": admitted,
@@ -492,6 +501,8 @@ class DataplaneRuntime:
             slots = np.asarray(res.slots)[:n]
             verdicts = np.asarray(res.verdicts)[:n]
             actions = np.asarray(res.actions)[:n]
+            if self.on_retire is not None:
+                self.on_retire(q, rows, slots, verdicts, actions, rec.tick)
             self.telemetry.record_tick(
                 q, slots, verdicts, actions,
                 latency_us=(now - ts) * 1e6,

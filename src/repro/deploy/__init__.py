@@ -1,0 +1,27 @@
+"""Continuous deployment: sample live traffic, fine-tune BNN slot
+models, roll out via canary ``SwapSlot`` epochs, auto-remediate.
+
+The subsystem closes training -> checkpoint -> rollout -> verification
+under live traffic (DESIGN.md §12): ``PacketSampler`` harvests labeled
+examples off the retire/drop taps, ``OnlineTrainer`` fine-tunes and
+checkpoints slot models, ``CanaryController`` stages/bakes/decides every
+rollout as typed control epochs covered by ``continuity_audit()``, and
+``AutoRemediator`` wires ``AnomalyDetector.proposals()`` into the same
+gate (``launch.dataplane --auto-remediate``).
+"""
+
+from repro.deploy.canary import (CanaryController, bank_of, deploy_log_of,
+                                 live_queues, paired_err, unwrap,
+                                 wrong_verdict_total)
+from repro.deploy.remediate import (AutoRemediator, DeployDriver,
+                                    ScheduledRollout, corrupt_params)
+from repro.deploy.sampler import (LabelOracle, PacketSampler, Reservoir,
+                                  labeled_pool)
+from repro.deploy.trainer import OnlineTrainer, TrainResult, words_to_pm1
+
+__all__ = [
+    "AutoRemediator", "CanaryController", "DeployDriver", "LabelOracle",
+    "OnlineTrainer", "PacketSampler", "Reservoir", "ScheduledRollout",
+    "TrainResult", "bank_of", "corrupt_params", "deploy_log_of",
+    "labeled_pool", "live_queues", "paired_err", "unwrap", "words_to_pm1",
+]

@@ -25,6 +25,17 @@ after the run finishes so dashboards and smoke tests can read the
 final state.  ``--epoch-log-json PATH`` writes the machine-readable
 epoch log (the same serializer the ``/epochs`` endpoint uses).
 
+``--auto-remediate`` closes the observability loop (`repro.deploy`): a
+packet sampler harvests labeled examples from live traffic, the anomaly
+detector's typed proposals execute online — ``ProgramReta`` /
+``FailQueues`` as direct epochs, retrain triggers as fine-tune ->
+checkpoint -> canary ``SwapSlot`` rollouts that promote or auto-roll-back
+on the bake-window evidence.  ``--deploy-demo promote|rollback`` scripts
+one end-to-end rollout (``rollback`` corrupts the trained weights to
+force the auto-rollback path) and fails the run unless that terminal
+decision is reached.  Every deployment decision lands in the epoch-log
+printout, ``/epochs``, and ``--epoch-log-json``.
+
 ``--fault-plan FILE`` arms a typed fault plan (`repro.dataplane.faults`
 JSON: stalls, crashes, shard errors, dropped acks, delayed retires);
 the fault regimes (``barrier-straggler``, ``crash-mid-commit``) arm
@@ -53,6 +64,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import tempfile
 import time
 
 import jax
@@ -98,6 +110,16 @@ def _print_run_report(rt, reports, hosts: int, queues_per_host: int) -> dict:
                   f"completed={t['completed']} dropped={t['dropped']} "
                   f"ok={h['ok']}")
 
+    deploy_log = getattr(rt, "deploy_log", None) or []
+    for d in deploy_log:
+        ep = d.get("epoch")
+        slot = d.get("slot")
+        print(f"deploy: tick {d['tick']:>4} {d['event']:<14}"
+              + (f" slot={slot}" if slot is not None else "")
+              + (f" epoch={ep}" if ep is not None else "")
+              + (f" ({d['reason']})" if d.get("reason") else ""))
+    snap["deployments"] = deploy_log
+
     log = rt.control.command_log()
     cont = rt.control.continuity_audit()
     modes = cont.get("commit_modes", {})
@@ -141,18 +163,28 @@ def _print_run_report(rt, reports, hosts: int, queues_per_host: int) -> dict:
     return snap
 
 
-def _start_observer(rt, args, *, num_slots: int):
-    """``--observe PORT``: attach the delta stream + detector, serve."""
-    if args.observe is None:
-        return None
+def _make_detector(rt, args, *, num_slots: int):
+    """Attach the delta stream + anomaly detector when ``--observe`` or
+    ``--auto-remediate`` needs them; returns (stream, detector)."""
+    if args.observe is None and not getattr(args, "auto_remediate", False):
+        return None, None
     from repro.obs import AnomalyDetector, TelemetryStream, attach
-    from repro.obs.server import ObsServer
     stream = TelemetryStream()
     attach(rt, stream)
     det = AnomalyDetector(stream, num_queues=rt.num_queues,
                           num_slots=num_slots,
                           hosts=getattr(rt, "hosts", 1))
-    srv = ObsServer(rt, stream, port=args.observe, detector=det).start()
+    return stream, det
+
+
+def _start_observer(rt, args, *, num_slots: int, stream=None, detector=None):
+    """``--observe PORT``: serve the dashboard over the attached stream."""
+    if args.observe is None:
+        return None
+    from repro.obs.server import ObsServer
+    if stream is None:
+        stream, detector = _make_detector(rt, args, num_slots=num_slots)
+    srv = ObsServer(rt, stream, port=args.observe, detector=detector).start()
     print(f"observe: http://{srv.host}:{srv.port}/ "
           f"(/metrics /epochs /anomaly /stream /healthz)")
     return srv
@@ -273,6 +305,28 @@ def main(argv=None) -> None:
     ap.add_argument("--epoch-log-json", metavar="PATH", default=None,
                     help="write the machine-readable epoch log (same "
                          "serializer as the /epochs endpoint)")
+    ap.add_argument("--auto-remediate", action="store_true",
+                    help="act on anomaly-detector proposals online: "
+                         "ProgramReta/FailQueues epochs directly, retrain "
+                         "triggers via fine-tune -> canary rollout")
+    ap.add_argument("--deploy-demo", default=None,
+                    choices=["promote", "rollback"],
+                    help="script one end-to-end rollout: fine-tune on "
+                         "sampled traffic, canary it, and require the "
+                         "named terminal decision ('rollback' corrupts "
+                         "the weights to force the auto-rollback path)")
+    ap.add_argument("--deploy-bake-ticks", type=int, default=12,
+                    help="canary bake window before promote/rollback")
+    ap.add_argument("--deploy-warmup-ticks", type=int, default=16,
+                    help="ticks of sampling before a scripted rollout "
+                         "fine-tunes (--deploy-demo)")
+    ap.add_argument("--deploy-steps", type=int, default=32,
+                    help="SGD steps per online fine-tune")
+    ap.add_argument("--deploy-share", type=float, default=0.125,
+                    help="RETA bucket share steered at the canary queue")
+    ap.add_argument("--checkpoint-dir", metavar="DIR", default=None,
+                    help="where online fine-tunes commit checkpoints "
+                         "(default: a fresh temp dir)")
     args = ap.parse_args(argv)
     if args.hosts < 1:
         ap.error("--hosts must be >= 1")
@@ -283,15 +337,30 @@ def main(argv=None) -> None:
         _replay_main(args)
         return
 
+    deploy_active = bool(args.auto_remediate or args.deploy_demo)
+    if deploy_active and args.slots < 2:
+        ap.error("--auto-remediate/--deploy-demo need --slots >= 2 "
+                 "(a canary slot)")
+
     total_queues = args.hosts * args.queues
     print(f"== resident bank: {args.slots} slots (random init) ==")
     bank = executor.init_bank(jax.random.PRNGKey(args.seed), args.slots)
     workload = workloads.make_workload(
         args.scenario, num_slots=args.slots, num_queues=args.queues,
         scale=args.scale, hosts=args.hosts)
+    pool, pool_labels = workload.payload_pool, None
+    if deploy_active and pool is None:
+        # synthetic regimes render random payloads with no ground truth;
+        # deployment needs labeled traffic, so render from the corpus
+        # pool instead (the oracle keys on payload words[1:])
+        from repro.deploy import labeled_pool
+        pool, pool_labels = labeled_pool(samples_per_group=512,
+                                         seed=args.seed)
+        print(f"deploy: labeled payload pool ({pool.shape[0]} examples, "
+              f"{int(pool_labels.sum())} malicious)")
     trace = workloads.render(
         list(workload.phases), num_slots=args.slots, seed=args.seed,
-        num_queues=total_queues, payload_pool=workload.payload_pool)
+        num_queues=total_queues, payload_pool=pool)
     chaos_epochs = sum(len(p.chaos) for p in workload.phases)
     print(f"scenario: {args.scenario}, {len(workload.phases)} phases, "
           f"{trace.total_packets} packets, {chaos_epochs} chaos event(s), "
@@ -326,10 +395,45 @@ def main(argv=None) -> None:
           f"ring={args.ring_capacity}, depth={rt.pipeline_depth}, "
           f"policy={getattr(policy, 'name', None)}")
 
-    observer = _start_observer(rt, args, num_slots=args.slots)
+    stream, detector = _make_detector(rt, args, num_slots=args.slots)
+    observer = _start_observer(rt, args, num_slots=args.slots,
+                               stream=stream, detector=detector)
     driver = (workloads.record(rt, path=args.trace[1]) if recording
               else rt)
+    sampler = None
+    if deploy_active:
+        from repro import deploy
+        oracle = (deploy.LabelOracle(pool, pool_labels)
+                  if pool_labels is not None else None)
+        sampler = deploy.PacketSampler(oracle, num_slots=args.slots,
+                                       seed=args.seed).attach(rt)
+        ckpt_dir = args.checkpoint_dir or tempfile.mkdtemp(
+            prefix="deploy-ckpt-")
+        trainer = deploy.OnlineTrainer(checkpoint_dir=ckpt_dir,
+                                       steps=args.deploy_steps,
+                                       seed=args.seed)
+        canary_kw = dict(canary_share=args.deploy_share,
+                         bake_ticks=args.deploy_bake_ticks)
+        driver = deploy.DeployDriver(driver)
+        if args.deploy_demo:
+            driver.add(deploy.ScheduledRollout(
+                driver, sampler, trainer, target_slot=0,
+                warmup_ticks=args.deploy_warmup_ticks,
+                corrupt=args.deploy_demo == "rollback",
+                canary_kw=canary_kw))
+        if args.auto_remediate:
+            driver.add(deploy.AutoRemediator(
+                driver, detector, sampler=sampler, trainer=trainer,
+                canary_kw=canary_kw))
+        mode = args.deploy_demo or "auto-remediate"
+        print(f"deploy: {mode}, labeled oracle="
+              f"{'yes' if oracle is not None else 'no'}, "
+              f"bake={args.deploy_bake_ticks} ticks, "
+              f"share={args.deploy_share}, checkpoints -> {ckpt_dir}")
     reports = workloads.play(driver, trace)
+    if deploy_active:
+        driver.flush_deploy()   # no canary may dangle past end of traffic
+        sampler.detach()
     snap = _print_run_report(rt, reports, args.hosts, args.queues)
 
     if recording:
@@ -347,8 +451,18 @@ def main(argv=None) -> None:
             f.write("\n")
         print(f"wrote {args.json}")
     _finish_observer(observer, rt, args)
+    ok = True
+    if args.deploy_demo:
+        want = ("promoted" if args.deploy_demo == "promote"
+                else "rolled_back")
+        events = [d["event"] for d in snap.get("deployments", [])]
+        if want not in events:
+            print(f"deploy-demo FAILED: expected a {want!r} decision, "
+                  f"got {events}")
+            ok = False
     aud = snap["conservation"]
-    if not aud["ok"] or aud["wrong_verdict"] or not snap["continuity"]["ok"]:
+    if (not ok or not aud["ok"] or aud["wrong_verdict"]
+            or not snap["continuity"]["ok"]):
         sys.exit(1)
 
 

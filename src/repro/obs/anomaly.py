@@ -29,9 +29,25 @@ import statistics
 
 import numpy as np
 
-from repro.control.commands import FailQueues, ProgramReta
+from repro.control.commands import FailQueues, ProgramReta, SwapSlot
 from repro.dataplane import rss
 from repro.obs.stream import TelemetryStream
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrainRequest:
+    """Deploy-plane proposal — NOT a control command (never staged on the
+    control plane): fine-tune the named slot's model on freshly sampled
+    traffic and roll the result out through a canary ``SwapSlot`` epoch
+    (``repro.deploy``).  Carries the same ``describe()`` surface as the
+    typed commands so dashboards serialize proposals uniformly."""
+    slot: int
+    reason: str
+    tick: int
+
+    def describe(self) -> dict:
+        return {"cmd": "retrain", "slot": int(self.slot),
+                "reason": self.reason, "tick": int(self.tick)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -390,7 +406,36 @@ class AnomalyDetector:
                          for q in f.detail["queues"]})
         if silent:
             out.append(FailQueues(tuple(silent)))
+        # model-quality regimes: a shifted slot mix or a sustained drop
+        # surge (routing skew already handled above) means the resident
+        # model no longer matches the traffic — propose a retrain of the
+        # dominant slot plus the SwapSlot that would carry it.  The
+        # SwapSlot is a *spec* (params=None, the trace-format convention):
+        # the deploy plane materializes freshly trained weights before it
+        # can stage (`phases.materialize_command` in tests).
+        slot = self._dominant_slot()
+        if slot is not None:
+            shifts = [f for f in self.findings
+                      if f.detector == "slot_mix_shift"]
+            surges = [f for f in self.findings if f.detector == "drop_surge"]
+            if shifts:
+                out.append(SwapSlot(slot, None))
+                out.append(RetrainRequest(slot, "slot_mix_shift",
+                                          shifts[-1].tick))
+            elif surges and regime != "elephant-skew":
+                out.append(SwapSlot(slot, None))
+                out.append(RetrainRequest(slot, "drop_surge",
+                                          surges[-1].tick))
         return out
+
+    def _dominant_slot(self) -> int | None:
+        """The slot carrying the most completions over the last window."""
+        ticks = sorted(self.slot_mix)[-self.window:]
+        if not ticks:
+            return None
+        mix = sum((self.slot_mix[t] for t in ticks),
+                  np.zeros(self.num_slots, np.int64))
+        return int(mix.argmax()) if mix.sum() else None
 
     def _rebalanced_reta(self, hot: int) -> np.ndarray:
         """Round-robin RETA with half the hot queue's buckets re-dealt to

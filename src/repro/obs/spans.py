@@ -60,4 +60,10 @@ def epoch_log_doc(runtime) -> dict:
     faults = getattr(runtime, "_faults", None)
     if faults is not None and getattr(faults, "events", None):
         doc["fault_events"] = [dict(e) for e in faults.events]
+    deploy = getattr(runtime, "deploy_log", None)
+    if deploy:
+        # deployment decision trail (repro.deploy): canary start/promote/
+        # rollback, retrain triggers, auto-remediation actions — each tied
+        # to its typed epoch id in "epochs" above
+        doc["deployments"] = [dict(d) for d in deploy]
     return doc

@@ -54,6 +54,63 @@ def test_no_tmp_left_behind(rng):
         assert not any(n.endswith(".tmp") for n in os.listdir(d))
 
 
+def _manifest(ckpt_dir, step):
+    import msgpack
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "MANIFEST.msgpack")
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
+def test_leaf_extension_matches_recorded_codec(rng):
+    t = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 1, t)
+        m = _manifest(d, 1)
+        assert m["codec"] in ("zstd", "zlib")
+        ext = ".bin." + {"zstd": "zst", "zlib": "zlib"}[m["codec"]]
+        ckpt = os.path.join(d, "step_00000001")
+        for e in m["leaves"]:
+            assert e["file"].endswith(ext)
+            assert os.path.exists(os.path.join(ckpt, e["file"]))
+
+
+def test_zlib_fallback_writes_zlib_extension_and_roundtrips(rng, monkeypatch):
+    t = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        monkeypatch.setattr(store, "zstd", None)  # container without zstandard
+        store.save(d, 2, t)
+        m = _manifest(d, 2)
+        assert m["codec"] == "zlib"
+        assert all(e["file"].endswith(".bin.zlib") for e in m["leaves"])
+        like = jax.tree_util.tree_map(jnp.zeros_like, t)
+        back, _ = store.restore(d, 2, like)
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_zlib_leaves_under_zst_suffix_still_restore(rng, monkeypatch):
+    """Pre-fix fallback checkpoints wrote zlib bytes into ``.bin.zst``
+    files; the manifest codec (not the suffix) drives restore."""
+    t = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        monkeypatch.setattr(store, "zstd", None)
+        monkeypatch.setattr(
+            store, "_leaf_file",
+            lambda ps, codec: store.hashlib.sha1(
+                ps.encode()).hexdigest()[:16] + ".bin.zst")
+        store.save(d, 3, t)
+        m = _manifest(d, 3)
+        assert m["codec"] == "zlib"
+        assert all(e["file"].endswith(".bin.zst") for e in m["leaves"])
+        monkeypatch.undo()  # restore with real module state (zstd or not)
+        like = jax.tree_util.tree_map(jnp.zeros_like, t)
+        back, _ = store.restore(d, 3, like)
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_shape_mismatch_raises(rng):
     t = _tree(rng)
     with tempfile.TemporaryDirectory() as d:

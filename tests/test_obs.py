@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from _hyp import given, settings, st
-from repro.control import FailQueues, ProgramReta
+from repro.control import FailQueues, ProgramReta, SwapSlot
 from repro.core import executor
 from repro.core import packet as pkt
 from repro.dataplane import (DataplaneRuntime, MeshDataplane, faults,
@@ -20,6 +20,7 @@ from repro.dataplane.workloads import generators
 from repro.dataplane.workloads import trace as trace_mod
 from repro.obs import AnomalyDetector, TelemetryStream, attach, detach
 from repro.obs import spans
+from repro.obs.anomaly import RetrainRequest
 from repro.obs.server import ObsServer
 
 
@@ -241,11 +242,17 @@ def test_detector_classifies_regime(bank2, regime):
     assert det.detect_tick() is not None
 
     # proposals must stage-accept without mutating the control plane
+    # (RetrainRequest is a deploy-plane proposal, not a control command;
+    # SwapSlot proposals are specs — materialized before staging, the
+    # trace-format convention)
     before = rt.control.stats()["epochs_applied"]
     state_before = _state_fingerprint(rt._control_state())
     for cmd in det.proposals():
-        assert isinstance(cmd, (ProgramReta, FailQueues))
-        rt._validate_command(cmd)  # raises if it would not stage
+        if isinstance(cmd, RetrainRequest):
+            assert cmd.describe()["cmd"] == "retrain"
+            continue
+        assert isinstance(cmd, (ProgramReta, FailQueues, SwapSlot))
+        rt._validate_command(workloads.materialize_command(cmd))
     assert rt.control.stats()["epochs_applied"] == before
     assert _state_fingerprint(rt._control_state()) == state_before
 
@@ -273,6 +280,56 @@ def test_detector_proposes_failover_for_silent_queue():
     props = det.proposals()
     fails = [c for c in props if isinstance(c, FailQueues)]
     assert fails and 1 in fails[0].queues
+
+
+def _delta(tick, queues):
+    return {"kind": "delta", "seq": tick, "tick": tick, "t_s": None,
+            "host": 0, "queues": queues, "events": {}}
+
+
+def test_detector_proposes_retrain_on_slot_mix_shift():
+    """A flipped slot mix draws a SwapSlot *spec* (params=None) plus a
+    RetrainRequest for the now-dominant slot (unit-level: crafted
+    deltas, no runtime)."""
+    stream = TelemetryStream()
+    det = AnomalyDetector(stream, num_queues=2, num_slots=2, window=4)
+    for tick in range(16):
+        per_slot = [64, 0] if tick < 8 else [0, 64]  # mix flips at t=8
+        stream.push(_delta(tick, [
+            {"queue": 0, "completed": 64, "dropped": 0,
+             "per_slot": per_slot, "actions": [64, 0, 0], "depth": 0},
+            {"queue": 1, "completed": 60, "dropped": 0,
+             "per_slot": per_slot, "actions": [60, 0, 0], "depth": 0}]))
+    det.poll()
+    assert any(f.detector == "slot_mix_shift" for f in det.findings)
+    props = det.proposals()
+    swaps = [c for c in props if isinstance(c, SwapSlot)]
+    retrains = [c for c in props if isinstance(c, RetrainRequest)]
+    assert swaps and swaps[0].slot == 1 and swaps[0].params is None
+    assert retrains and retrains[0].slot == 1
+    assert retrains[0].reason == "slot_mix_shift"
+    assert retrains[0].describe()["cmd"] == "retrain"
+
+
+def test_detector_proposes_retrain_on_drop_surge():
+    """A sustained drop surge without routing skew (balanced queues)
+    means the model, not the RETA, mismatches the traffic -> retrain."""
+    stream = TelemetryStream()
+    det = AnomalyDetector(stream, num_queues=2, num_slots=2, window=4)
+    for tick in range(12):
+        drops = 0 if tick < 6 else 24  # ring-edge drops start at t=6
+        stream.push(_delta(tick, [
+            {"queue": 0, "completed": 64, "dropped": drops,
+             "per_slot": [64, 0], "actions": [64, 0, 0], "depth": 0},
+            {"queue": 1, "completed": 60, "dropped": drops,
+             "per_slot": [60, 0], "actions": [60, 0, 0], "depth": 0}]))
+    det.poll()
+    assert any(f.detector == "drop_surge" for f in det.findings)
+    assert det.classify()["regime"] != "elephant-skew"
+    retrains = [c for c in det.proposals()
+                if isinstance(c, RetrainRequest)]
+    assert retrains and retrains[0].slot == 0
+    assert retrains[0].reason == "drop_surge"
 
 
 # ---------------------------------------------------------------------------
