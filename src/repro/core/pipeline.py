@@ -71,6 +71,19 @@ def packet_step(
     else:  # baseline operating mode: fixed single-model path
         slots = jnp.full(packets.shape[:1], fixed_slot, jnp.int32)
     if strategy == "fused":
+        if ops._resolve(backend) in ("ref", "mxu"):
+            # No Pallas launch to feed: the oracle gathers per-row weights
+            # anyway, so slot-grouping only adds an argsort and up to
+            # ``num_slots`` padding blocks of dead compute.  Run the bank
+            # directly on the arrival-order batch (bit-identical scores).
+            from repro.kernels import ref as _ref
+            scores_d = _ref.banked_xnor_forward_ref(
+                bank["w1p"], bank["b1"], bank["w2"], bank["b2"],
+                pkt.payload_of(packets), slots)
+            actions_d = _fused_kernel.actions_ref(
+                scores_d, packets[:, pkt.CONTROL_WORD_LO])
+            return PacketResult(slots, scores_d[:, 0], scores_d[:, 0] > 0.0,
+                                actions_d)
         bb = min(block_b, packets.shape[0])
         g = bank_lib.group_by_slot_padded(slots, num_slots, bb)
         scores_pad, actions_pad = ops.packet_forward_fused(

@@ -174,6 +174,7 @@ class DataplaneRuntime:
         audit: bool = False,
         record: bool = False,
         pipeline_depth: int = 1,
+        megastep_ticks: int = 1,
         policy=None,
         fault_injector=None,
         log_capacity: int | None = None,
@@ -223,6 +224,24 @@ class DataplaneRuntime:
             raise ValueError(f"unknown fanout {fanout!r}")
         self.fanout = fanout
         self._vstep = None if fanout == "loop" else self._build_fanout(fanout)
+        if megastep_ticks < 1:
+            raise ValueError("megastep_ticks must be >= 1")
+        self.megastep_ticks = int(megastep_ticks)
+        # Deferred (megastep) mode: dispatch/tick stage work and run the
+        # authoritative host ring simulation; a window of N ticks executes
+        # on device in ONE compiled scan at flush (DESIGN.md §13).  Typed
+        # fault injection needs per-tick host control, and the megastep's
+        # batched forward replicates the fused strategy on the reference
+        # backend only — every other configuration falls back to the
+        # sequential loop.  Verdicts and telemetry totals are
+        # bit-identical either way.
+        self._mega = None
+        if (self.megastep_ticks > 1 and fault_injector is None
+                and strategy == "fused"):
+            from repro.kernels import ops as _ops
+            if _ops._resolve(backend) == "ref":
+                from repro.dataplane.megastep import MegastepEngine
+                self._mega = MegastepEngine(self)
 
     # -- worker construction ------------------------------------------------
 
@@ -295,6 +314,11 @@ class DataplaneRuntime:
             self._install_reta(np.asarray(cmd.reta, np.int32))
         elif not apply_routing_command(self, cmd):
             raise TypeError(f"not a control command: {cmd!r}")
+        if self._mega is not None:
+            # deferred mode: the host mirror just mutated; serialize the
+            # same mutation into the on-device epoch queue so it applies
+            # at the matching scan step of the staged window
+            self._mega.stage_delta(cmd)
 
     def _fault_check(self, point: str) -> None:
         """Consult the armed ``FaultInjector`` (if any) at a stage/apply
@@ -309,7 +333,9 @@ class DataplaneRuntime:
                     failed=set(self.failed_queues), policy=self.policy,
                     bucket_load=self.bucket_load,
                     slot_swaps=self.telemetry.slot_swaps,
-                    reta_updates=self.telemetry.reta_updates)
+                    reta_updates=self.telemetry.reta_updates,
+                    mega=(self._mega.delta_mark()
+                          if self._mega is not None else None))
 
     def _rollback_control_state(self, s: dict) -> None:
         self.bank = s["bank"]
@@ -319,6 +345,8 @@ class DataplaneRuntime:
         self.bucket_load = s["bucket_load"]
         self.telemetry.slot_swaps = s["slot_swaps"]
         self.telemetry.reta_updates = s["reta_updates"]
+        if self._mega is not None and s.get("mega") is not None:
+            self._mega.delta_rollback(s["mega"])
 
     def _install_reta(self, reta: np.ndarray) -> None:
         reta = np.asarray(reta, np.int32)
@@ -333,9 +361,24 @@ class DataplaneRuntime:
         """Apply queued epochs at a *fully quiescent* boundary: in-flight
         ticks retire first, so the wrong-verdict counter each epoch
         snapshots has absorbed every pre-epoch tick and per-epoch
-        continuity attribution is exact even at pipeline_depth > 1."""
+        continuity attribution is exact even at pipeline_depth > 1.
+
+        In deferred (megastep) mode epochs do NOT force a flush — that
+        is the point of the on-device epoch queue: the epoch applies
+        eagerly to the host mirrors (exact atomic apply / rollback /
+        log) and its serialized deltas land mid-window at the matching
+        scan step.  The window only flushes early when the epoch batch
+        would overflow the bounded device queue.  Trade-off: the
+        ``wrong_verdict_at_apply`` each epoch snapshots is then the
+        value as of the last flush — identical in the zero-wrong-verdict
+        world the audit enforces, coarser only once something is already
+        broken."""
         if self.control.has_pending:
-            self.retire_all()
+            if self._mega is not None:
+                self._mega.prepare_epochs(
+                    sum(len(r.commands) for r in self.control.pending))
+            else:
+                self.retire_all()
             self.control.apply_pending(self._tick_count)
 
     def _tick_boundary(self) -> None:
@@ -428,6 +471,10 @@ class DataplaneRuntime:
             per_queue.append({"offered": int(rows.shape[0]),
                               "admitted": admitted,
                               "dropped": int(rows.shape[0]) - admitted})
+        if self._mega is not None:
+            # deferred mode: the host rings above stay authoritative;
+            # the device replays the identical admission at flush
+            self._mega.stage_burst(packets_np, q)
         return {"per_queue": per_queue,
                 "dropped": sum(p["dropped"] for p in per_queue)}
 
@@ -454,6 +501,11 @@ class DataplaneRuntime:
         self._tick_boundary()
         self._tick_count += 1
         self.telemetry.runtime_ticks += 1
+        if self._mega is not None:
+            # deferred mode: pop the host mirror now (authoritative FIFO
+            # order / counters), run the compute on device at flush —
+            # ``pipeline_depth`` is superseded by the scan window
+            return self._mega.stage_tick()
         popped = [ring.pop(self.batch) for ring in self.rings]
         counts = [rows.shape[0] for rows, _ in popped]
         total = sum(counts)
@@ -530,7 +582,11 @@ class DataplaneRuntime:
                 depths=[len(r) for r in self.rings])
 
     def retire_all(self) -> None:
-        """Flush the pipeline: retire every in-flight tick (oldest first)."""
+        """Flush the pipeline: retire every in-flight tick (oldest first).
+        In deferred mode this is the megastep flush point — the staged
+        window runs on device and drains to telemetry/taps/recorder."""
+        if self._mega is not None:
+            self._mega.flush()
         while self._inflight:
             self._retire(self._inflight.popleft())
         if self.telemetry.has_sink:
@@ -539,10 +595,15 @@ class DataplaneRuntime:
             self.telemetry.emit_delta(tick=self._tick_count)
 
     def in_flight_rows(self) -> list[int]:
-        """Rows popped but not yet retired, per queue."""
+        """Rows popped but not yet retired, per queue (pipelined ticks,
+        plus the staged-but-unflushed megastep window in deferred mode —
+        conservation is checkable mid-window without forcing a flush)."""
         out = [0] * self.num_queues
         for rec in self._inflight:
             for q, n in enumerate(rec.counts):
+                out[q] += n
+        if self._mega is not None:
+            for q, n in enumerate(self._mega.staged_rows()):
                 out[q] += n
         return out
 

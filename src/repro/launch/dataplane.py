@@ -219,7 +219,8 @@ def _replay_main(args) -> None:
           f"{trace.total_packets} packets, "
           f"{len(trace.command_timeline())} command epoch(s), "
           f"{hosts} host(s) x {queues} queue(s)")
-    rt = workloads.make_runtime(trace, audit=args.audit)
+    rt = workloads.make_runtime(trace, audit=args.audit,
+                                megastep_ticks=args.megastep_ticks)
     observer = _start_observer(rt, args,
                                num_slots=int(meta.get("num_slots") or 4))
     rep = workloads.replay(trace, rt)
@@ -266,6 +267,11 @@ def main(argv=None) -> None:
     ap.add_argument("--policy", default=None,
                     choices=["static", "least-depth", "drop-rate"],
                     help="closed-loop routing policy (default: none)")
+    ap.add_argument("--megastep-ticks", type=int, default=1,
+                    help="run N ticks on-device in one compiled scan "
+                         "(deferred megastep mode, DESIGN.md §13); 1 = "
+                         "the sequential per-tick loop.  Verdicts and "
+                         "telemetry totals are bit-identical at any N")
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     help="bounded in-flight tick window (1 = synchronous)")
     ap.add_argument("--scale", type=int, default=1,
@@ -378,7 +384,8 @@ def main(argv=None) -> None:
     recording = bool(args.trace)
     kw = dict(strategy=args.strategy, fanout=args.fanout, batch=args.batch,
               ring_capacity=args.ring_capacity, audit=args.audit,
-              pipeline_depth=args.pipeline_depth, policy=policy,
+              pipeline_depth=args.pipeline_depth,
+              megastep_ticks=args.megastep_ticks, policy=policy,
               record=recording, fault_injector=injector,
               log_capacity=args.log_capacity, log_spill=args.log_spill)
     if args.hosts > 1:
