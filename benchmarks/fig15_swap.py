@@ -1,0 +1,221 @@
+"""Fig. 15 (repo extension) — zero-copy model switching (DESIGN.md §14).
+
+Three measurements over the double-buffered device bank:
+
+  * **commit latency: flip vs re-stage** — the barrier-apply cost of one
+    ``SwapSlot`` epoch on the double-buffered runtime (params prestaged
+    into the shadow bank at submit time, commit = pointer flip) against
+    the legacy single-bank runtime (commit = ``update_slot`` re-stage,
+    fig9's 2023.966 us baseline).  The audit key asserts the flip path
+    is at least 10x cheaper;
+  * **flip/re-stage equivalence** — the full emergency scenario run
+    through both commit paths under audit mode, with the verdict streams
+    compared bit-for-bit (expect 0 mismatches, 0 wrong verdicts);
+  * **LRU slot-cache churn** — 16 resident slots serving a rotating
+    working set of 16/32/48 registered models: every demanded model is
+    ``ensure``d through the cache (hits are host-side, misses become
+    flip-commit ``SwapSlot`` epochs), traffic for that model flows the
+    same tick, and the audit re-scores every packet.  Reports end-to-end
+    churn throughput, the cache hit/miss economics, and the wall cost of
+    a hit, a cold miss, and a prefetched miss.
+
+Run standalone with ``--json BENCH_10.json`` for the machine-readable
+map, or through ``python -m benchmarks.run --only fig15``.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+import time
+
+if __package__ in (None, ""):  # invoked as `python benchmarks/fig15_swap.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(1, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, standalone_json_main, time_us
+from repro.control import SlotCache, SwapSlot
+from repro.core import bank as bank_lib, executor, packet as pkt
+from repro.dataplane import (DataplaneRuntime, emergency_phases, play,
+                             render, scenarios)
+
+NUM_SLOTS = 4       # commit-latency section mirrors fig9's shape
+NUM_QUEUES = 4
+BATCH = 128
+
+CACHE_SLOTS = 16    # churn section: the paper's max resident bank
+CACHE_MODELS = (16, 32, 48)
+CHURN_STEPS = 96
+CHURN_BURST = 64
+
+
+def _fresh_runtime(bank, **kw):
+    kw.setdefault("num_queues", NUM_QUEUES)
+    kw.setdefault("strategy", "fused")
+    kw.setdefault("batch", BATCH)
+    kw.setdefault("ring_capacity", 1024)
+    return DataplaneRuntime(bank, **kw)
+
+
+def _swap_apply_us(rt, params, trials: int = 9, warmup: int = 3) -> float:
+    """Median barrier-apply cost of a fresh single-SwapSlot epoch.
+
+    A new command object per trial keeps the prestage honest (staging
+    tokens key on command identity); warmup trials absorb the staging
+    jit compiles so the median sees the steady state."""
+    samples = []
+    for i in range(warmup + trials):
+        rt.control.submit(SwapSlot(1, params))
+        rt.flush_control()
+        if i >= warmup:
+            samples.append(rt.control.log[-1].apply_us)
+    return float(statistics.median(samples))
+
+
+def bench_commit_latency(bank):
+    delivered = scenarios.default_swap_delivery(1)
+    flip_rt = _fresh_runtime(bank)                        # double-buffered
+    restage_rt = _fresh_runtime(bank, double_buffer=False)  # legacy path
+    flip_us = _swap_apply_us(flip_rt, delivered)
+    restage_us = _swap_apply_us(restage_rt, delivered)
+    speedup = restage_us / max(flip_us, 1e-9)
+    emit("fig15.commit.flip_us", flip_us,
+         "shadow prestaged at submit; barrier commit = pointer flip")
+    emit("fig15.commit.restage_us", restage_us,
+         f"legacy update_slot at the barrier; flip is {speedup:.1f}x faster")
+    emit("fig15.audit.flip_not_10x_faster", int(flip_us * 10 > restage_us),
+         f"expect=0 (flip {flip_us:.1f}us vs re-stage {restage_us:.1f}us)")
+
+
+def bench_flip_restage_equivalence(bank):
+    """Same scenario, both commit paths, bit-identical verdict streams."""
+    trace = render(emergency_phases(NUM_SLOTS), num_slots=NUM_SLOTS, seed=0)
+    streams = {}
+    wrong = 0
+    for name, db in (("flip", True), ("restage", False)):
+        rt = _fresh_runtime(bank, ring_capacity=8192, audit=True,
+                            record=True, double_buffer=db)
+        play(rt, trace)
+        aud = rt.audit_conservation()
+        assert aud["ok"], aud
+        wrong += aud["wrong_verdict"]
+        streams[name] = (rt.completed_seq, rt.completed_verdicts,
+                         rt.completed_slots)
+    mismatch = int(streams["flip"] != streams["restage"])
+    emit("fig15.audit.flip_vs_restage_verdict_mismatch", mismatch,
+         "expect=0: pointer-flip commits change nothing observable")
+    emit("fig15.audit.flip_wrong_verdict", wrong,
+         "expect=0 across both commit paths, audit mode")
+
+
+def _demand_sequence(n_models: int, steps: int, seed: int = 0) -> list[int]:
+    """Deterministic skewed working set: a hot third revisits often, the
+    cold tail returns periodically (the diurnal/flash-crowd shape the
+    prefetcher is built for)."""
+    rng = np.random.default_rng(seed)
+    hot = max(1, n_models // 3)
+    out = []
+    for i in range(steps):
+        if rng.random() < 0.7:
+            out.append(int(rng.integers(hot)))
+        else:
+            out.append(hot + (i % max(1, n_models - hot)))
+    return out
+
+
+def _register_models(cache, n_models: int):
+    src = executor.init_bank(jax.random.PRNGKey(7), n_models)
+    names = [f"m{i:02d}" for i in range(n_models)]
+    for i, name in enumerate(names):
+        cache.register(name, bank_lib.select_slot(src, i))
+    return names
+
+
+def bench_cache_churn(payload):
+    wrong_total = 0
+    for n_models in CACHE_MODELS:
+        bank = executor.init_bank(jax.random.PRNGKey(3), CACHE_SLOTS)
+        rt = DataplaneRuntime(bank, num_queues=2, strategy="fused",
+                              batch=CHURN_BURST, ring_capacity=2048,
+                              audit=True)
+        cache = SlotCache(rt)
+        names = _register_models(cache, n_models)
+        demand = _demand_sequence(n_models, CHURN_STEPS)
+        done = 0
+        t0 = time.perf_counter()
+        for step, m in enumerate(demand):
+            slot = cache.ensure(names[m])
+            burst = pkt.make_packets(
+                np.full(CHURN_BURST, slot),
+                payload[(step * CHURN_BURST) % len(payload):]
+                [:CHURN_BURST])
+            rt.dispatch(burst)
+            done += rt.tick()
+        done += rt.drain()
+        dt = time.perf_counter() - t0
+        aud = rt.audit_conservation()
+        assert aud["ok"], aud
+        wrong_total += aud["wrong_verdict"]
+        s = cache.stats()
+        emit(f"fig15.cache.models{n_models}.kpps", done / dt / 1e3,
+             f"{done} pkts, {CACHE_SLOTS} slots, hit_rate="
+             f"{s['hit_rate']:.2f}, misses={s['misses']}, "
+             f"evictions={s['evictions']}")
+    emit("fig15.audit.cache_wrong_verdict", wrong_total,
+         f"expect=0 over {len(CACHE_MODELS)} churn sweeps, audit mode")
+
+
+def bench_cache_op_costs():
+    """Wall cost of the three cache outcomes: resident hit (host-only),
+    cold miss (stage+flip), prefetched miss (flip-only commit)."""
+    bank = executor.init_bank(jax.random.PRNGKey(3), CACHE_SLOTS)
+    rt = DataplaneRuntime(bank, num_queues=2, strategy="fused",
+                          batch=CHURN_BURST, ring_capacity=2048)
+    cache = SlotCache(rt)
+    names = _register_models(cache, CACHE_SLOTS + 8)
+    for n in names[:CACHE_SLOTS]:      # fill the resident set
+        cache.ensure(n)
+    emit("fig15.cache.hit_us",
+         time_us(lambda: cache.ensure(names[0]), iters=200),
+         "resident hit: pure host bookkeeping")
+
+    cold = list(names[CACHE_SLOTS:])
+
+    def miss(prefetch):
+        m = cold.pop(0)
+        cold.append(m)  # rotate so each trial is a genuine miss
+        if prefetch:
+            cache.prefetch(m)
+        t0 = time.perf_counter()
+        cache.ensure(m)
+        rt.flush_control()
+        return (time.perf_counter() - t0) * 1e6
+
+    for _ in range(3):  # absorb staging-jit compiles
+        miss(False), miss(True)
+    emit("fig15.cache.miss_us",
+         float(statistics.median([miss(False) for _ in range(9)])),
+         "cold miss: submit-time stage + flip commit")
+    emit("fig15.cache.prefetched_miss_us",
+         float(statistics.median([miss(True) for _ in range(9)])),
+         "predicted miss: shadow pre-staged, commit flip-only")
+
+
+def main():
+    bank = executor.init_bank(jax.random.PRNGKey(0), NUM_SLOTS)
+    rng = np.random.default_rng(11)
+    payload = rng.integers(0, 2**32, size=(4096, pkt.PAYLOAD_WORDS),
+                           dtype=np.uint32)
+    bench_commit_latency(bank)
+    bench_flip_restage_equivalence(bank)
+    bench_cache_churn(payload)
+    bench_cache_op_costs()
+
+
+if __name__ == "__main__":
+    standalone_json_main(main, __doc__)

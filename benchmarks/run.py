@@ -151,8 +151,9 @@ def main(argv=None) -> None:
     from benchmarks import (fig4_runtime, fig5_scaling, fig6_slot_behavior,
                             fig7_fused, fig8_dataplane, fig9_control,
                             fig10_mesh, fig11_workloads, fig12_faults,
-                            fig13_obs, fig14_deploy, roofline,
-                            table4_continuity, table5_controlplane)
+                            fig13_obs, fig14_deploy, fig15_swap,
+                            roofline, table4_continuity,
+                            table5_controlplane)
 
     benches = [
         ("fig4", fig4_runtime.main),
@@ -167,6 +168,7 @@ def main(argv=None) -> None:
         ("fig12", fig12_faults.main),
         ("fig13", fig13_obs.main),
         ("fig14", fig14_deploy.main),
+        ("fig15", fig15_swap.main),
         ("table4", table4_continuity.main),
         ("table5", table5_controlplane.main),
         ("roofline", roofline.main),

@@ -2,8 +2,10 @@
 
 ``commands`` defines the five typed mutations, ``plane`` batches them
 into atomic, epoch-stamped transactions applied only at tick boundaries
-and keeps the auditable command log, and ``policy`` closes the loop from
-telemetry back to ``ProgramReta`` epochs.
+and keeps the auditable command log, ``policy`` closes the loop from
+telemetry back to ``ProgramReta`` epochs, and ``slotcache`` scales model
+residency past the device slot count with LRU eviction and a
+telemetry-driven prefetcher (DESIGN.md §14).
 """
 
 from repro.control.commands import (  # noqa: F401
@@ -20,4 +22,7 @@ from repro.control.plane import (  # noqa: F401
 from repro.control.policy import (  # noqa: F401
     POLICIES, DropRateRebalance, LeastDepth, PolicyView, RoutingPolicy,
     StaticReta, make_policy,
+)
+from repro.control.slotcache import (  # noqa: F401
+    CacheError, SlotCache, SlotMixPrefetcher,
 )

@@ -206,7 +206,14 @@ class ControlPlane:
 
     def submit(self, *commands: Command) -> int:
         """Queue one atomic epoch; returns its id.  Nothing is applied
-        until the runtime reaches a tick boundary."""
+        until the runtime reaches a tick boundary.
+
+        Runtimes with a double-buffered bank expose ``_prestage_epoch``;
+        it runs here, after the epoch is queued, so SwapSlot payloads
+        start staging into the shadow bank immediately — overlapped with
+        the traffic still flowing — and the eventual barrier commit is a
+        pointer flip (DESIGN.md §14).  Prestaging is best-effort and
+        mutates no runtime-visible state."""
         if not commands:
             raise ValueError("an epoch needs at least one command")
         for c in commands:
@@ -220,14 +227,19 @@ class ControlPlane:
         )
         self._next_epoch += 1
         self._pending.append(rec)
+        prestage = getattr(self._runtime, "_prestage_epoch", None)
+        if prestage is not None:
+            prestage(rec)
         return rec.epoch
 
     @property
     def pending(self) -> list[EpochRecord]:
+        """Epochs queued but not yet applied (a defensive copy)."""
         return list(self._pending)
 
     @property
     def has_pending(self) -> bool:
+        """Whether any epoch is queued for the next tick boundary."""
         return bool(self._pending)
 
     # -- application (runtime-side, tick boundary only) ---------------------
@@ -350,6 +362,7 @@ class ControlPlane:
 
     @property
     def log(self) -> list[EpochRecord]:
+        """The in-memory epoch log, oldest first (a defensive copy)."""
         return list(self._log)
 
     def command_log(self) -> list[dict]:

@@ -1,0 +1,326 @@
+"""LRU slot-cache over the device-resident bank (DESIGN.md §14).
+
+The paper keeps at most 16 models resident; the emergency-network story
+("millions of users, heterogeneous demands") needs dozens.  ``SlotCache``
+is the control-plane layer that closes the gap: it holds a host-side
+registry of packed model params, maps the hot subset onto the runtime's
+``num_slots`` device-resident slots with LRU eviction, and turns a miss
+into an ordinary ``SwapSlot`` epoch — which, on a double-buffered
+runtime, prestages into the shadow bank at submit time so the barrier
+commit is a pointer flip.
+
+``SlotMixPrefetcher`` closes the loop from observability: it watches the
+per-slot service mix in the `repro.obs` delta stream plus the cache's
+own request history, estimates each model's demand period (diurnal and
+flash-crowd regimes revisit models), and pre-stages the model predicted
+to return next — so the eventual miss commits flip-only, with zero
+staging on the apply path.
+
+The cache never touches the data plane directly: every residency change
+flows through ``runtime.control.submit`` and applies at a tick boundary,
+so the zero-wrong-verdict audit covers cache churn unchanged.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.control.commands import SwapSlot
+
+
+class CacheError(RuntimeError):
+    """A cache operation that cannot be satisfied — e.g. a miss when
+    every resident slot is pinned, or an explicit eviction of a pinned
+    (active) slot."""
+
+
+class SlotCache:
+    """LRU cache of registered models over the device-resident slots.
+
+    * ``register(model_id, params)`` adds a model to the host registry.
+    * ``ensure(model_id)`` returns the model's resident slot, swapping it
+      in first if needed (LRU victim, ``SwapSlot`` epoch; the swap
+      becomes effective at the next tick boundary — call it between
+      bursts, like any control mutation).
+    * ``pin``/``unpin`` protect a resident model from eviction;
+      ``evict`` of a pinned model raises ``CacheError``.
+    * ``prefetch(model_id)`` reserves a victim slot and (on a
+      double-buffered runtime) stages the params into the shadow bank
+      early, so a later ``ensure`` miss commits flip-only.
+
+    Victim selection is pure host bookkeeping — deliberately independent
+    of whether the runtime double-buffers — so the slot placement (and
+    therefore every verdict) is bit-identical between the flip and
+    re-staging commit paths.
+    """
+
+    def __init__(self, runtime, *, resident: list[str] | None = None):
+        self.rt = runtime
+        self.num_slots = int(runtime.num_slots)
+        self._models: dict[str, Any] = {}
+        self._slot_model: list[str | None] = [None] * self.num_slots
+        self._resident: dict[str, int] = {}
+        self._lru: collections.OrderedDict[str, None] = \
+            collections.OrderedDict()
+        self._pinned: set[str] = set()
+        # model -> (reserved slot, staging token); reservations are made
+        # even when staging is impossible so victim choice stays
+        # deterministic across runtime configurations
+        self._prefetched: dict[str, tuple[int, object]] = {}
+        self._clock = 0
+        self._requests: list[tuple[int, str]] = []
+        self.hits = self.misses = self.evictions = 0
+        self.prefetch_issued = self.prefetch_hits = 0
+        if resident:
+            if len(resident) > self.num_slots:
+                raise ValueError("more initial residents than slots")
+            for i, m in enumerate(resident):
+                self._slot_model[i] = m
+                self._resident[m] = i
+                self._lru[m] = None
+
+    # -- registry -----------------------------------------------------------
+
+    def register(self, model_id: str, params) -> None:
+        """Add (or replace) a model in the host registry.  Params are
+        converted to device arrays once so the same pytree object flows
+        through prefetch staging and the eventual ``SwapSlot`` — the
+        double buffer promotes a staged prefetch by object identity."""
+        self._models[model_id] = jax.tree_util.tree_map(jnp.asarray, params)
+
+    @property
+    def registered(self) -> list[str]:
+        return list(self._models)
+
+    @property
+    def clock(self) -> int:
+        """Monotonic request counter (the prefetcher's time base)."""
+        return self._clock
+
+    def is_resident(self, model_id: str) -> bool:
+        return model_id in self._resident
+
+    def model_at(self, slot: int) -> str | None:
+        """The model occupying ``slot`` (None for an unnamed slot)."""
+        return self._slot_model[slot]
+
+    # -- residency ----------------------------------------------------------
+
+    def _victim(self, *, avoid_reserved: bool) -> int:
+        reserved = {s for s, _ in self._prefetched.values()}
+        for i, m in enumerate(self._slot_model):  # free slots first
+            if m is None and (not avoid_reserved or i not in reserved):
+                return i
+        for m in self._lru:  # then least-recently used
+            if m in self._pinned:
+                continue
+            slot = self._resident[m]
+            if avoid_reserved and slot in reserved:
+                continue
+            return slot
+        raise CacheError(
+            f"no evictable slot: {len(self._pinned)}/{self.num_slots} "
+            "resident slots pinned")
+
+    def ensure(self, model_id: str) -> int:
+        """Return the slot serving ``model_id``, swapping it in on miss.
+
+        A miss submits a ``SwapSlot`` epoch (prestaged into the shadow
+        bank on double-buffered runtimes) and immediately updates the
+        residency map — the epoch applies at the next tick boundary,
+        before any packet dispatched after this call is served."""
+        if model_id not in self._models and model_id not in self._resident:
+            raise KeyError(f"unregistered model {model_id!r}")
+        self._clock += 1
+        self._requests.append((self._clock, model_id))
+        slot = self._resident.get(model_id)
+        if slot is not None:
+            self.hits += 1
+            self._lru.move_to_end(model_id)
+            return slot
+        self.misses += 1
+        pf = self._prefetched.pop(model_id, None)
+        if pf is not None:
+            slot, token = pf
+            bankbuf = getattr(self.rt, "_bankbuf", None)
+            if bankbuf is not None and bankbuf.is_staged(token):
+                # shadow already holds the params: the submit below
+                # adopts the staged entry and the apply is flip-only
+                self.prefetch_hits += 1
+        else:
+            try:
+                slot = self._victim(avoid_reserved=True)
+            except CacheError:
+                slot = self._victim(avoid_reserved=False)
+        self.rt.control.submit(SwapSlot(slot, self._models[model_id]))
+        evicted = self._slot_model[slot]
+        if evicted is not None:
+            del self._resident[evicted]
+            self._lru.pop(evicted, None)
+            self._prefetched.pop(evicted, None)
+            self.evictions += 1
+        # drop any reservation that pointed at this slot for another model
+        for m, (s, _) in list(self._prefetched.items()):
+            if s == slot:
+                del self._prefetched[m]
+        self._slot_model[slot] = model_id
+        self._resident[model_id] = slot
+        self._lru[model_id] = None
+        return slot
+
+    def prefetch(self, model_id: str) -> bool:
+        """Reserve a victim slot for ``model_id`` and stage its params
+        into the shadow bank early.  Returns True if the params were
+        actually staged (double-buffered runtime with a free shadow);
+        the reservation itself is recorded either way.  Best-effort: a
+        later unrelated epoch may reclaim the shadow — ``ensure`` checks
+        staging liveness before counting a prefetch hit."""
+        if model_id not in self._models:
+            raise KeyError(f"unregistered model {model_id!r}")
+        if model_id in self._resident or model_id in self._prefetched:
+            return False
+        try:
+            slot = self._victim(avoid_reserved=True)
+        except CacheError:
+            return False
+        token = ("prefetch", model_id, self._clock)
+        self._prefetched[model_id] = (slot, token)
+        self.prefetch_issued += 1
+        bankbuf = getattr(self.rt, "_bankbuf", None)
+        if bankbuf is None or bankbuf.has_staged:
+            # at most one staged-ahead party at a time: a busy shadow
+            # (pending epoch or earlier prefetch) must not be clobbered
+            return False
+        return bankbuf.stage(slot, self._models[model_id],
+                             token=token, epoch="prefetch")
+
+    # -- pinning / explicit eviction ----------------------------------------
+
+    def pin(self, model_id: str) -> None:
+        """Protect a resident model's slot from eviction."""
+        if model_id not in self._resident:
+            raise CacheError(f"model {model_id!r} is not resident")
+        self._pinned.add(model_id)
+
+    def unpin(self, model_id: str) -> None:
+        self._pinned.discard(model_id)
+
+    def evict(self, model_id: str) -> int:
+        """Explicitly free a resident model's slot (the device weights
+        remain until the slot is reused).  Pinned — active — models are
+        rejected with ``CacheError``."""
+        if model_id in self._pinned:
+            raise CacheError(
+                f"model {model_id!r} is pinned to its slot (active); "
+                "unpin before evicting")
+        slot = self._resident.pop(model_id, None)
+        if slot is None:
+            raise CacheError(f"model {model_id!r} is not resident")
+        self._lru.pop(model_id, None)
+        self._slot_model[slot] = None
+        self.evictions += 1
+        return slot
+
+    # -- prefetcher feed / reporting ----------------------------------------
+
+    def take_requests(self) -> list[tuple[int, str]]:
+        """Drain the (clock, model) request history accumulated since the
+        last call — the prefetcher's demand signal."""
+        out, self._requests = self._requests, []
+        return out
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "registered": len(self._models),
+            "resident": len(self._resident),
+            "num_slots": self.num_slots,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": (self.hits / total) if total else None,
+            "evictions": self.evictions,
+            "prefetch_issued": self.prefetch_issued,
+            "prefetch_hits": self.prefetch_hits,
+        }
+
+
+class SlotMixPrefetcher:
+    """Telemetry-driven prefetcher: predicts the next slot mix and
+    pre-stages the model most likely to return.
+
+    Two signals feed an inter-arrival model per registered model:
+
+    * the cache's request history (``take_requests``) — every ``ensure``
+      marks demand at the cache clock;
+    * the per-slot service mix in the `repro.obs` delta stream — while a
+      model is resident and actually serving packets, its ``last_seen``
+      is refreshed, so the period estimate measures from last *traffic*,
+      not last swap-in (a flash crowd keeps its model "recent" for as
+      long as it lasts; a diurnal model ages out between its peaks).
+
+    ``poll()`` prefetches the non-resident model whose predicted return
+    (last_seen + EWMA period) falls within ``horizon`` cache-clock units
+    of now.  Predictions are deterministic in the observed history.
+    """
+
+    def __init__(self, cache: SlotCache, stream=None, *,
+                 horizon: int = 8, alpha: float = 0.5):
+        self.cache = cache
+        self.stream = stream
+        self.horizon = int(horizon)
+        self.alpha = float(alpha)
+        self._cursor = 0
+        self._last_seen: dict[str, int] = {}
+        self._period: dict[str, float] = {}
+        self.issued: list[str] = []
+
+    def observe(self) -> None:
+        """Fold new evidence (cache requests + telemetry deltas) into the
+        per-model inter-arrival estimates."""
+        a = self.alpha
+        for t, m in self.cache.take_requests():
+            last = self._last_seen.get(m)
+            if last is not None and t > last:
+                gap = float(t - last)
+                p = self._period.get(m)
+                self._period[m] = gap if p is None else (1 - a) * p + a * gap
+            self._last_seen[m] = t
+        if self.stream is None:
+            return
+        events, self._cursor = self.stream.tail(self._cursor)
+        now = self.cache.clock
+        for ev in events:
+            if ev.get("kind") != "delta":
+                continue
+            for qd in ev.get("queues", ()):
+                for slot, n in enumerate(qd.get("per_slot", ())):
+                    if not n:
+                        continue
+                    m = self.cache.model_at(slot)
+                    if m is not None:
+                        self._last_seen[m] = max(
+                            self._last_seen.get(m, 0), now)
+
+    def poll(self, limit: int = 1) -> list[str]:
+        """Observe, then prefetch up to ``limit`` models predicted to be
+        demanded within ``horizon``.  Returns the models pre-staged."""
+        self.observe()
+        now = self.cache.clock
+        due = []
+        for m, period in self._period.items():
+            if self.cache.is_resident(m) or m not in self.cache._models:
+                continue
+            nxt = self._last_seen.get(m, 0) + period
+            if nxt <= now + self.horizon:
+                due.append((nxt, m))
+        due.sort()
+        out = []
+        for _, m in due[:int(limit)]:
+            if self.cache.prefetch(m):
+                out.append(m)
+        self.issued.extend(out)
+        return out

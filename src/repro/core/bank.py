@@ -25,6 +25,7 @@ Selection strategies (see DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -200,6 +201,230 @@ def pad_group_by_slot(
         np.asarray(block_slots, np.int32),
         np.concatenate(valid_parts),
     )
+
+
+# ---------------------------------------------------------------------------
+# double-buffered bank: zero-copy SwapSlot commit (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def copy_bank(bank: Params) -> Params:
+    """Deep device copy of a bank pytree (fresh buffers, same contents)."""
+    return jax.tree_util.tree_map(lambda leaf: jnp.asarray(leaf).copy(), bank)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _stage_slot(shadow: Params, params: Params, slot) -> Params:
+    """Write one slot's params into the shadow, donating the shadow's
+    buffers so XLA updates in place — no second copy of the bank survives.
+    ``slot`` is a traced scalar: one compilation serves every slot id."""
+    return jax.tree_util.tree_map(
+        lambda leaf, new: leaf.at[slot].set(new), shadow, params)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _sync_slot(shadow: Params, active: Params, slot) -> Params:
+    """Catch the shadow up on one slot the active bank has since published
+    (dirty-slot resync).  Donates the shadow only; the active bank — still
+    serving traffic — is read, never consumed."""
+    return jax.tree_util.tree_map(
+        lambda leaf, cur: leaf.at[slot].set(cur[slot]), shadow, active)
+
+
+class _Buf:
+    """One of the two device-resident bank copies, with a pin count.
+
+    A pinned buffer is referenced outside the double buffer (an open
+    megastep window, an epoch snapshot held for rollback) and must never
+    be donated; ``DoubleBufferedBank.stage`` un-aliases it with a fresh
+    copy instead (copy-on-write — a lingering pin costs one extra copy,
+    never correctness)."""
+
+    __slots__ = ("tree", "pins")
+
+    def __init__(self, tree: Params):
+        self.tree = tree
+        self.pins = 0
+
+
+class DoubleBufferedBank:
+    """Two device-resident copies of the bank: *active* (serving traffic)
+    and *shadow* (staging target).  ``SwapSlot`` staging donates into the
+    shadow while ticks keep reading the active copy; the epoch's barrier
+    commit is then ``commit()`` — a Python reference flip, O(1) regardless
+    of bank size.  Protocol, staging states, and rollback rules are
+    documented in DESIGN.md §14.
+
+    Invariants:
+      * the active buffer is never donated — every holder of the runtime's
+        ``bank`` attribute stays valid until the next flip *and* the next
+        staging onto that (by then shadow) buffer; holders that span that
+        window pin the buffer (``pin_active``/``unpin``).
+      * at most ONE epoch's swaps are prestaged at a time
+        (``_staged_epoch``); a second epoch's prestage is refused and
+        falls back to staging at apply time (``force=True``), which still
+        commits by flip.
+      * per-buffer dirty-slot sets record how far each buffer lags the
+        other; ``stage`` resyncs the shadow's dirty slots from the active
+        buffer before writing new params, so a flip always publishes a
+        complete bank.
+    """
+
+    def __init__(self, bank: Params):
+        self.num_slots = bank_size(bank)
+        # private copies: donation must never invalidate the caller's arrays
+        self._bufs = [_Buf(copy_bank(bank)), _Buf(copy_bank(bank))]
+        self._active = 0
+        self._dirty: list[set[int]] = [set(), set()]
+        self._staged: dict[Any, tuple[int, Params]] = {}
+        self._staged_epoch: Any = None
+        self._committed: dict[Any, int] = {}
+        self.stages = self.syncs = self.flips = 0
+        self.discards = self.unalias_copies = 0
+
+    # -- views ------------------------------------------------------------
+
+    @property
+    def active(self) -> Params:
+        return self._bufs[self._active].tree
+
+    @property
+    def shadow(self) -> Params:
+        return self._bufs[1 - self._active].tree
+
+    @property
+    def has_staged(self) -> bool:
+        return bool(self._staged)
+
+    def is_staged(self, token) -> bool:
+        return token in self._staged
+
+    def committed(self, token) -> bool:
+        return token in self._committed
+
+    # -- pinning ----------------------------------------------------------
+
+    def pin_active(self) -> _Buf:
+        """Pin the current active buffer (returns the pin handle)."""
+        buf = self._bufs[self._active]
+        buf.pins += 1
+        return buf
+
+    def unpin(self, buf: _Buf) -> None:
+        buf.pins = max(0, buf.pins - 1)
+
+    # -- staging ----------------------------------------------------------
+
+    def stage(self, slot: int, params: Params, *, token, epoch,
+              force: bool = False) -> bool:
+        """Stage ``params`` into the shadow's ``slot``; True if staged.
+
+        ``token`` identifies the request (a command's ``id()``, or a
+        prefetch key) so commit/rollback bookkeeping survives re-entry;
+        ``epoch`` scopes the one-staged-epoch policy.  A same-slot,
+        same-params re-stage (a prefetch being promoted to a real epoch)
+        adopts the existing staged entry without touching the device.
+        ``force=True`` (apply-time staging) evicts a stale staged epoch
+        instead of refusing.
+        """
+        if token in self._staged:
+            return True
+        for t, (s, p) in list(self._staged.items()):
+            if s == slot and p is params:  # prefetch promotion: rebind
+                del self._staged[t]
+                self._staged[token] = (slot, params)
+                self._staged_epoch = epoch
+                return True
+        if self._staged and self._staged_epoch != epoch:
+            if not force:
+                return False
+            self.discard_staged()
+        sh = 1 - self._active
+        buf = self._bufs[sh]
+        if buf.pins:
+            # copy-on-write: the pinned buffer stays with its pinner
+            buf = self._bufs[sh] = _Buf(copy_bank(buf.tree))
+            self.unalias_copies += 1
+        act = self._bufs[self._active].tree
+        for k in sorted(self._dirty[sh]):
+            if k == slot:
+                continue  # about to be overwritten anyway
+            buf.tree = _sync_slot(buf.tree, act, jnp.int32(k))
+            self.syncs += 1
+        self._dirty[sh].clear()
+        buf.tree = _stage_slot(
+            buf.tree, jax.tree_util.tree_map(jnp.asarray, params),
+            jnp.int32(slot))
+        self._staged[token] = (slot, params)
+        self._staged_epoch = epoch
+        self.stages += 1
+        return True
+
+    def discard_staged(self) -> None:
+        """Drop staged-but-uncommitted entries (their slots go dirty)."""
+        if not self._staged:
+            return
+        sh = 1 - self._active
+        self._dirty[sh].update(s for s, _ in self._staged.values())
+        self._staged.clear()
+        self._staged_epoch = None
+        self.discards += 1
+
+    # -- commit / rollback -------------------------------------------------
+
+    def commit(self) -> Params:
+        """Publish every staged slot by flipping which buffer is active.
+
+        O(1) — a Python reference swap; no weights move.  The demoted
+        buffer becomes the next shadow, dirty at exactly the slots just
+        published.  Returns the new active bank pytree."""
+        if not self._staged:
+            return self.active
+        old = self._active
+        self._active = 1 - old
+        for s, _ in self._staged.values():
+            self._dirty[old].add(s)
+        self._committed.update(
+            {t: s for t, (s, _) in self._staged.items()})
+        self._staged.clear()
+        self._staged_epoch = None
+        self.flips += 1
+        return self.active
+
+    def mark(self):
+        """Snapshot flip/staging bookkeeping for epoch rollback.
+
+        Taken at the epoch barrier's ``_control_state``; the previous
+        epoch's committed tokens are dead by then and are purged so
+        ``id()`` reuse can never alias a new command onto them."""
+        self._committed.clear()
+        return (self._active, dict(self._staged), self._staged_epoch,
+                dict(self._committed),
+                (set(self._dirty[0]), set(self._dirty[1])))
+
+    def restore(self, m) -> None:
+        """Roll back to a ``mark()``: un-flip if the epoch flipped, and
+        mark every slot staged/committed since the mark dirty (the shadow
+        holds rolled-back params there)."""
+        active, staged, staged_epoch, committed, dirty = m
+        rolled = {s for t, (s, _) in self._staged.items() if t not in staged}
+        rolled |= {s for t, s in self._committed.items() if t not in committed}
+        self._active = active
+        self._staged = dict(staged)
+        self._staged_epoch = staged_epoch
+        self._committed = dict(committed)
+        self._dirty = [set(dirty[0]), set(dirty[1])]
+        self._dirty[1 - active].update(rolled)
+
+    def reseed(self, bank: Params) -> None:
+        """Adopt externally supplied contents (trace-replay install, mesh
+        shard resync) as the new active bank.  The shadow is left in place
+        — possibly pinned — and marked fully dirty so the next stage
+        resyncs it."""
+        self.discard_staged()
+        self._bufs[self._active] = _Buf(copy_bank(bank))
+        self._dirty[self._active].clear()
+        self._dirty[1 - self._active] = set(range(self.num_slots))
+        self._committed.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -254,6 +254,7 @@ class MegastepEngine:
         self._deltas: list = []          # [(seq, DeviceDelta)]
         self._seq = 0
         self._window_bank = None         # bank version at window start
+        self._window_pin = None          # donation pin on that buffer
         self._window_t0: float | None = None
         self._last_flush_s: float | None = None
 
@@ -338,6 +339,10 @@ class MegastepEngine:
     def _open_window(self) -> None:
         if self._window_bank is None:
             self._window_bank = self.rt.bank
+            # pin the active buffer: a mid-window epoch flip would make it
+            # the staging shadow, and staging donates unpinned buffers —
+            # the window must keep computing against its opening version
+            self._window_pin = self.rt.bank_pin()
             self._window_t0 = time.perf_counter()
 
     def _sync_reta(self) -> None:
@@ -485,6 +490,8 @@ class MegastepEngine:
         self._close_window()
 
     def _close_window(self) -> None:
+        self.rt.bank_unpin(self._window_pin)
+        self._window_pin = None
         self._window_bank = None
         self._window_t0 = None
         self._sync_reta()

@@ -203,10 +203,12 @@ class MeshDataplane:
 
     @property
     def num_slots(self) -> int:
+        """Resident bank size (identical on every shard)."""
         return self.shards[0].num_slots
 
     @property
     def pipeline_depth(self) -> int:
+        """Bounded in-flight tick window (identical on every shard)."""
         return self.shards[0].pipeline_depth
 
     @property
@@ -216,18 +218,26 @@ class MeshDataplane:
 
     @property
     def completed_seq(self) -> list:
+        """Per-tick completed sequence numbers, concatenated shard-major
+        (record mode only)."""
         return [seqs for s in self.shards for seqs in s.completed_seq]
 
     @property
     def completed_verdicts(self) -> list:
+        """Per-tick verdict arrays, concatenated shard-major (record
+        mode only) — the bit-exact replay/equivalence signal."""
         return [v for s in self.shards for v in s.completed_verdicts]
 
     @property
     def completed_slots(self) -> list:
+        """Per-tick served-slot arrays, concatenated shard-major
+        (record mode only)."""
         return [v for s in self.shards for v in s.completed_slots]
 
     @property
     def dropped_seq(self) -> list[int]:
+        """Sequence numbers of tail-dropped packets across all shards
+        (record mode only)."""
         return [x for s in self.shards for x in s.dropped_seq]
 
     def _shard_reta(self, reta: np.ndarray) -> np.ndarray:
@@ -363,6 +373,12 @@ class MeshDataplane:
         (the ``commit-ack`` injection point), enforce quorum, stamp the
         barrier proof and the commit mode.  Raising here rolls the epoch
         back on every host like any apply-time failure."""
+        # barrier commit: every participant publishes its staged SwapSlot
+        # params by flipping its double-buffered bank — O(1) per host, no
+        # weights move (DESIGN.md §14).  A quorum failure below rolls the
+        # flips back through the mesh-wide snapshot.
+        for h in self._participants:
+            self.shards[h]._finish_epoch(rec)
         tick = self._tick_count
         dropped = [h for h in self._participants
                    if self._faults is not None
@@ -424,7 +440,10 @@ class MeshDataplane:
         ref = next((h for h in range(self.hosts) if h != host
                     and not self.health.is_dead(h)), None)
         if ref is not None:
-            shard.bank = self.shards[ref].bank
+            # copy, never alias: under double buffering each shard owns
+            # its two device buffers, and an aliased bank would be
+            # donated out from under the reference shard
+            shard.adopt_bank(self.shards[ref].bank)
         shard._install_reta(self._shard_reta(self.reta))
         shard.retire_all()
 
@@ -454,6 +473,16 @@ class MeshDataplane:
     def flush_control(self) -> None:
         """Force-apply pending epochs now (host code runs between ticks)."""
         self._apply_control()
+
+    def _prestage_epoch(self, rec) -> None:
+        """Broadcast staging overlap (``ControlPlane.submit`` hook): fan
+        the epoch's SwapSlot payloads to every live shard's shadow bank at
+        submit time, so the mesh barrier commit is a pointer flip on every
+        host instead of a per-host bank re-stage (DESIGN.md §14).  Dead
+        hosts are skipped; they re-adopt the bank at rejoin resync."""
+        for h in range(self.hosts):
+            if not self.health.is_dead(h):
+                self.shards[h]._prestage_epoch(rec)
 
     # -- data plane ---------------------------------------------------------
 
@@ -563,6 +592,8 @@ class MeshDataplane:
         }
 
     def snapshot(self) -> dict:
+        """One-call mesh report: aggregated telemetry, the mesh-wide
+        conservation audit, health/lease state, and control stats."""
         elapsed = (time.perf_counter() - self._t_start
                    if self._t_start is not None else None)
         merged = telemetry_mod.merge([s.telemetry for s in self.shards])

@@ -158,6 +158,22 @@ class _InFlight:
 
 
 class DataplaneRuntime:
+    """Single-host multi-queue data-plane runtime (DESIGN.md §6/§7).
+
+    Public surface: ``dispatch`` (arrival edge), ``tick`` (pipeline
+    step), ``retire_all``/``drain`` (flush), ``control`` (the epoch-
+    stamped mutation funnel, `repro.control.ControlPlane`),
+    ``flush_control``, ``adopt_bank``, ``audit_conservation`` and
+    ``snapshot`` (reporting).  All state mutation flows through control
+    epochs; the attributes (``bank``, ``reta``, ``policy``, ...) are
+    read-only views between tick boundaries.
+
+    With ``double_buffer=True`` (default) the resident bank is held in a
+    `repro.core.bank.DoubleBufferedBank`: SwapSlot params stage into the
+    shadow copy at submit time while traffic flows, and the epoch commit
+    is an O(1) pointer flip (DESIGN.md §14) instead of a bank re-stage.
+    """
+
     def __init__(
         self,
         bank,
@@ -179,11 +195,20 @@ class DataplaneRuntime:
         fault_injector=None,
         log_capacity: int | None = None,
         log_spill: str | None = None,
+        double_buffer: bool = True,
     ):
         self.bank = bank
         self.num_queues = int(num_queues)
         self.num_slots = int(num_slots if num_slots is not None
                              else bank_lib.bank_size(bank))
+        # Double-buffered bank: the runtime owns two private device
+        # copies; ``self.bank`` aliases the active one.  The caller's
+        # ``bank`` argument is never donated.
+        self._bankbuf = None
+        self._epoch_nonce: object = None
+        if double_buffer:
+            self._bankbuf = bank_lib.DoubleBufferedBank(bank)
+            self.bank = self._bankbuf.active
         self.strategy = strategy
         self.batch = int(batch)
         self.block_b = min(int(block_b), self.batch)
@@ -308,7 +333,18 @@ class DataplaneRuntime:
         may call this — it is the single mutation funnel."""
         self._fault_check("apply")
         if isinstance(cmd, SwapSlot):
-            self.bank = bank_lib.update_slot(self.bank, cmd.slot, cmd.params)
+            if self._bankbuf is not None:
+                # zero-copy path: make sure the params are staged in the
+                # shadow (a no-op when the epoch prestaged at submit),
+                # then leave publication to the _finish_epoch flip
+                tok = id(cmd)
+                if not self._bankbuf.committed(tok):
+                    self._bankbuf.stage(int(cmd.slot), cmd.params,
+                                        token=tok, epoch=self._epoch_nonce,
+                                        force=True)
+            else:
+                self.bank = bank_lib.update_slot(
+                    self.bank, cmd.slot, cmd.params)
             self.telemetry.slot_swaps += 1
         elif isinstance(cmd, ProgramReta):
             self._install_reta(np.asarray(cmd.reta, np.int32))
@@ -329,15 +365,23 @@ class DataplaneRuntime:
     def _control_state(self) -> dict:
         """Snapshot everything epochs mutate (apply-time rollback).  Safe
         by reference: appliers install fresh objects, never mutate these."""
+        self._epoch_nonce = object()  # scopes apply-time staging (§14)
         return dict(bank=self.bank, reta=self.reta,
                     failed=set(self.failed_queues), policy=self.policy,
                     bucket_load=self.bucket_load,
                     slot_swaps=self.telemetry.slot_swaps,
                     reta_updates=self.telemetry.reta_updates,
+                    bankswap=(self._bankbuf.mark()
+                              if self._bankbuf is not None else None),
                     mega=(self._mega.delta_mark()
                           if self._mega is not None else None))
 
     def _rollback_control_state(self, s: dict) -> None:
+        if self._bankbuf is not None and s.get("bankswap") is not None:
+            self._bankbuf.restore(s["bankswap"])
+            # the rolled-back epoch's staged params are garbage; its slots
+            # go dirty and resync from the (restored) active bank later
+            self._bankbuf.discard_staged()
         self.bank = s["bank"]
         self.reta = s["reta"]
         self.failed_queues = s["failed"]
@@ -347,6 +391,64 @@ class DataplaneRuntime:
         self.telemetry.reta_updates = s["reta_updates"]
         if self._mega is not None and s.get("mega") is not None:
             self._mega.delta_rollback(s["mega"])
+
+    def _prestage_epoch(self, rec) -> None:
+        """Submit-time hook (``ControlPlane.submit``): stage the epoch's
+        SwapSlot params into the shadow bank while traffic keeps flowing,
+        so the barrier commit is a pointer flip (DESIGN.md §14).
+
+        Best-effort by design: a busy shadow (another epoch already
+        prestaged, or a live prefetch) just defers staging to apply time,
+        and obviously-invalid commands are left for ``_validate_command``
+        to reject with the normal epoch-atomic semantics."""
+        if self._bankbuf is None:
+            return
+        for cmd in rec.commands:
+            if not isinstance(cmd, SwapSlot):
+                continue
+            if not 0 <= int(cmd.slot) < self.num_slots:
+                continue
+            try:
+                if (jax.tree_util.tree_structure(cmd.params)
+                        != jax.tree_util.tree_structure(self.bank)):
+                    continue
+                self._bankbuf.stage(int(cmd.slot), cmd.params,
+                                    token=id(cmd), epoch=rec.epoch)
+            except Exception:
+                # e.g. leaf-shape mismatch: apply-time validation owns the
+                # rejection; drop whatever partially staged
+                self._bankbuf.discard_staged()
+
+    def _finish_epoch(self, rec) -> None:
+        """Epoch barrier commit: publish every staged SwapSlot by flipping
+        which device buffer is active — O(1), no weights move."""
+        if self._bankbuf is not None:
+            self.bank = self._bankbuf.commit()
+
+    def adopt_bank(self, bank) -> None:
+        """Install externally supplied bank contents outside the epoch
+        path (trace-replay install, mesh shard resync).  Under double
+        buffering the contents are copied into a fresh active buffer so
+        staging and flips keep working; otherwise a plain reference
+        install."""
+        if self._bankbuf is not None:
+            self._bankbuf.reseed(bank)
+            self.bank = self._bankbuf.active
+        else:
+            self.bank = bank
+
+    def bank_pin(self):
+        """Pin the current active bank buffer against donation (taken by
+        holders that outlive the next epoch, e.g. an open megastep
+        window).  Returns an opaque handle for ``bank_unpin``; None when
+        double buffering is off (nothing is ever donated then)."""
+        return (self._bankbuf.pin_active()
+                if self._bankbuf is not None else None)
+
+    def bank_unpin(self, handle) -> None:
+        """Release a ``bank_pin`` handle."""
+        if handle is not None and self._bankbuf is not None:
+            self._bankbuf.unpin(handle)
 
     def _install_reta(self, reta: np.ndarray) -> None:
         reta = np.asarray(reta, np.int32)
@@ -608,6 +710,8 @@ class DataplaneRuntime:
         return out
 
     def drain(self, max_ticks: int = 100_000) -> int:
+        """Tick until every ring is empty, then flush the pipeline.
+        Returns the number of rows served."""
         return drain_rings(self, max_ticks)
 
     # -- audit + reporting --------------------------------------------------
@@ -627,6 +731,8 @@ class DataplaneRuntime:
                 "wrong_verdict": self.telemetry.wrong_verdict}
 
     def snapshot(self) -> dict:
+        """One-call runtime report: telemetry totals, conservation audit,
+        configuration echo, and control-plane stats."""
         elapsed = (time.perf_counter() - self._t_start
                    if self._t_start is not None else None)
         out = self.telemetry.snapshot(elapsed_s=elapsed)

@@ -117,12 +117,15 @@ def _bank_of(rt):
 
 def _set_bank(rt, bank) -> None:
     """Install the recorded initial bank before replay starts (pre-run
-    initialization, not a runtime mutation — no packets are in flight)."""
-    if hasattr(rt, "bank"):
-        rt.bank = bank
-    else:
-        for s in rt.shards:
-            s.bank = bank
+    initialization, not a runtime mutation — no packets are in flight).
+    Routed through ``adopt_bank`` so a double-buffered runtime seeds its
+    device copies instead of aliasing the caller's arrays."""
+    targets = [rt] if hasattr(rt, "bank") else list(rt.shards)
+    for t in targets:
+        if hasattr(t, "adopt_bank"):
+            t.adopt_bank(bank)
+        else:
+            t.bank = bank
 
 
 def _records(rt) -> bool:
@@ -313,7 +316,9 @@ class TraceRecorder:
                         if path is not None else None)
         self._stream_packets = 0
         self.control = _RecordingControl(runtime.control, self)
-        self._bank0 = _bank_of(runtime)
+        # snapshot to host memory NOW: the live device buffer may be
+        # donated away by later SwapSlot staging (double-buffered bank)
+        self._bank0 = jax.tree_util.tree_map(np.asarray, _bank_of(runtime))
         self._mark_totals = None
         self._mark_wrong = 0
 

@@ -245,7 +245,67 @@ def _replay_main(args) -> None:
         sys.exit(1)
 
 
-def main(argv=None) -> None:
+class CacheChurnDriver:
+    """Same-API facade (the ``DeployDriver`` precedent) that churns a
+    ``SlotCache`` while traffic flows: every ``stride`` ticks it demands
+    the next model of a rotating schedule wider than the resident bank,
+    so the run exercises hits, misses, LRU evictions, and — with a
+    prefetcher — flip-only prefetch promotions, all under the normal
+    zero-wrong-verdict audit."""
+
+    def __init__(self, inner, cache, schedule, *, stride: int = 4,
+                 prefetcher=None):
+        self._inner = inner
+        self.cache = cache
+        self.prefetcher = prefetcher
+        self._schedule = list(schedule)
+        self._stride = max(1, int(stride))
+        self._ticks = 0
+        self._i = 0
+
+    def tick(self) -> int:
+        n = self._inner.tick()
+        self._ticks += 1
+        if self._schedule and self._ticks % self._stride == 0:
+            self.cache.ensure(self._schedule[self._i % len(self._schedule)])
+            self._i += 1
+            if self.prefetcher is not None:
+                self.prefetcher.poll()
+        return n
+
+    def dispatch(self, packets_np, now=None, **kw):
+        return self._inner.dispatch(packets_np, now=now, **kw)
+
+    def drain(self, max_ticks: int = 100_000) -> int:
+        return self._inner.drain(max_ticks)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def _make_slot_cache(rt, args, bank):
+    """``--slot-cache N``: register N models (the bank's own slots first,
+    then fresh inits) and return (cache, churn schedule, prefetcher)."""
+    from repro.control import SlotCache, SlotMixPrefetcher
+    from repro.core import bank as bank_lib
+    n = args.slot_cache
+    k = rt.num_slots
+    names = [f"model{i:02d}" for i in range(n)]
+    cache = SlotCache(rt, resident=names[:k])
+    for i, name in enumerate(names):
+        if i < k:
+            cache.register(name, bank_lib.select_slot(bank, i))
+        else:
+            cache.register(name, executor.init_params(
+                jax.random.PRNGKey(args.seed + 1000 + i)))
+    prefetcher = SlotMixPrefetcher(cache) if args.prefetch else None
+    return cache, names, prefetcher
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher's argparse parser, exposed as a function so the CLI
+    reference (docs/cli.md) and its parity test can introspect the live
+    flag set."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--hosts", type=int, default=1,
                     help="mesh host shards (1 = single-host runtime)")
@@ -333,11 +393,28 @@ def main(argv=None) -> None:
     ap.add_argument("--checkpoint-dir", metavar="DIR", default=None,
                     help="where online fine-tunes commit checkpoints "
                          "(default: a fresh temp dir)")
+    ap.add_argument("--slot-cache", type=int, metavar="N", default=None,
+                    help="register N models behind the LRU slot-cache "
+                         "(DESIGN.md §14) and churn residency during the "
+                         "run; N may exceed --slots")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="poll the telemetry-driven prefetcher during "
+                         "slot-cache churn so predicted misses commit "
+                         "flip-only (needs --slot-cache)")
+    return ap
+
+
+def main(argv=None) -> None:
+    ap = build_parser()
     args = ap.parse_args(argv)
     if args.hosts < 1:
         ap.error("--hosts must be >= 1")
     if args.trace and args.trace[0] not in ("record", "replay"):
         ap.error("--trace MODE must be 'record' or 'replay'")
+    if args.prefetch and not args.slot_cache:
+        ap.error("--prefetch needs --slot-cache N")
+    if args.slot_cache is not None and args.slot_cache < 1:
+        ap.error("--slot-cache must be >= 1")
 
     if args.trace and args.trace[0] == "replay":
         _replay_main(args)
@@ -437,11 +514,36 @@ def main(argv=None) -> None:
               f"{'yes' if oracle is not None else 'no'}, "
               f"bake={args.deploy_bake_ticks} ticks, "
               f"share={args.deploy_share}, checkpoints -> {ckpt_dir}")
+    cache = None
+    if args.slot_cache:
+        cache, schedule, prefetcher = _make_slot_cache(rt, args, bank)
+        if prefetcher is not None and stream is None:
+            # no observe/remediate stream attached; give the prefetcher
+            # its own delta tail so slot-mix evidence still flows
+            from repro.obs import TelemetryStream, attach
+            stream = TelemetryStream()
+            attach(rt, stream)
+        if prefetcher is not None:
+            prefetcher.stream = stream
+        driver = CacheChurnDriver(driver, cache, schedule,
+                                  prefetcher=prefetcher)
+        print(f"slot-cache: {args.slot_cache} models over "
+              f"{rt.num_slots} slots, prefetch="
+              f"{'on' if prefetcher is not None else 'off'}")
     reports = workloads.play(driver, trace)
     if deploy_active:
         driver.flush_deploy()   # no canary may dangle past end of traffic
         sampler.detach()
     snap = _print_run_report(rt, reports, args.hosts, args.queues)
+    if cache is not None:
+        cs = cache.stats()
+        hr = f"{cs['hit_rate']:.2f}" if cs["hit_rate"] is not None else "-"
+        print(f"slot-cache: {cs['registered']} registered, "
+              f"{cs['resident']}/{cs['num_slots']} resident, "
+              f"hits={cs['hits']} misses={cs['misses']} hit_rate={hr} "
+              f"evictions={cs['evictions']} "
+              f"prefetch={cs['prefetch_hits']}/{cs['prefetch_issued']}")
+        snap["slot_cache"] = cs
 
     if recording:
         saved = driver.finish(name=args.scenario, seed=args.seed)
